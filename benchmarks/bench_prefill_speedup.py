@@ -1,0 +1,67 @@
+"""Paper Fig. 3(a): end-to-end prefill speedup vs context length.
+
+Measured CPU wall-clock of the jitted prefill under flux fixed Ω=0.5
+(FA-SSA and FA-TA) vs dense, plus the derived FLOP-model speedup at
+the paper's 256K point (mode_flops)."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_call, trained_model
+from repro.core import modes as M
+from repro.models import model as MD
+
+LENGTHS = [128, 256, 512, 1024]
+
+
+def run() -> List[Row]:
+    cfg, params = trained_model()
+    rng = np.random.default_rng(0)
+    rows: List[Row] = []
+    half = np.array([i % 2 for i in range(cfg.num_layers)], np.int64)
+
+    variants = {
+        "dense": dict(routing_ctx="fa_only"),
+        "flux-FA-SSA-0.5": dict(routing_ctx="fixed",
+                                fixed_pattern=jnp.asarray(half)),
+        "flux-FA-TA-0.5": dict(routing_ctx="fixed",
+                               fixed_pattern=jnp.asarray(half),
+                               sa_mode="ta"),
+    }
+    base_us = {}
+    for name, kw in variants.items():
+        cfg_v = cfg
+        if kw.pop("sa_mode", None) == "ta":
+            cfg_v = cfg.replace(flux=cfg.flux.replace(sa_mode="ta",
+                                                      chunk=64))
+        per_len = []
+        for S in LENGTHS:
+            toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, S)),
+                               jnp.int32)
+            fn = jax.jit(lambda t, kw=dict(kw), c=cfg_v: MD.prefill(
+                params, c, t, want_cache=False, **kw).logits)
+            us = time_call(fn, toks, warmup=1, iters=3)
+            per_len.append(us)
+            base_us.setdefault(S, us if name == "dense" else None)
+        sp = [base_us[S] / u if base_us[S] else float("nan")
+              for S, u in zip(LENGTHS, per_len)]
+        derived = " ".join(f"S{S}={s:.2f}x"
+                           for S, s in zip(LENGTHS, sp))
+        rows.append(Row(f"prefill_speedup/{name}", per_len[-1], derived))
+
+    # derived 256K FLOP-model speedup (paper's operating point)
+    S = 262144
+    H, D = cfg.num_heads, cfg.head_dim
+    fa = M.mode_flops(M.FULL, S, S, H, D)
+    flux = cfg.flux.replace(sink=128, local=2048, chunk=16384)
+    ssa = M.mode_flops(M.ssa_mode(flux), S, S, H, D)
+    ta = M.mode_flops(M.ta_mode(flux), S, S, H, D)
+    for nm, sa in (("ssa", ssa), ("ta", ta)):
+        mix = 0.5 * fa + 0.5 * sa  # Ω=0.5 layer mix
+        rows.append(Row(f"prefill_speedup/derived256k_{nm}", 0.0,
+                        f"attn_flop_speedup={fa / mix:.2f}x"))
+    return rows

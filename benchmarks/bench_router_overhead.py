@@ -1,0 +1,35 @@
+"""Paper Fig. 9: router overhead vs sequence length (512 → 1M).
+
+The prefix-suffix pooling reads only the boundary tokens, so the
+router's cost must be length-invariant."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_call, trained_model
+from repro.core import router as R
+
+LENGTHS = [512, 8192, 131072, 1048576]
+
+
+def run() -> List[Row]:
+    cfg, params = trained_model()
+    in_dim = cfg.num_heads * cfg.head_dim
+    rp = R.router_init(jax.random.key(0), in_dim, cfg.flux)
+    rows: List[Row] = []
+    us_all = []
+    fn = jax.jit(lambda x: R.router_logits(rp, x, cfg.flux.pool_size))
+    for S in LENGTHS:
+        x = jnp.zeros((1, S, in_dim), jnp.bfloat16)
+        us = time_call(fn, x, warmup=1, iters=3)
+        us_all.append(us)
+        rows.append(Row(f"router_overhead/S{S}", us,
+                        f"pool={cfg.flux.pool_size}"))
+    ratio = max(us_all) / max(min(us_all), 1e-9)
+    rows.append(Row("router_overhead/length_invariance", 0.0,
+                    f"max_over_min={ratio:.2f} (≈1 ⇒ invariant)"))
+    return rows

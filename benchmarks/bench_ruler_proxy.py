@@ -1,0 +1,28 @@
+"""Paper Table 2 (RULER proxy): needle retrieval vs context length —
+length extrapolation under flux vs static sparsity."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, eval_accuracy, trained_model
+
+LENGTHS = [96, 192, 384, 768]
+
+
+def run() -> List[Row]:
+    cfg, params = trained_model()
+    rows: List[Row] = []
+    for name, kw in {
+        "FA": dict(routing_ctx="fa_only"),
+        "flux": dict(routing_ctx="hard"),
+        "all-SA": dict(pattern=np.zeros(cfg.num_layers, np.int64)),
+    }.items():
+        accs = [eval_accuracy(cfg, params, "needle", seq=s, **kw)
+                for s in LENGTHS]
+        derived = " ".join(f"L{s}={a:.3f}"
+                           for s, a in zip(LENGTHS, accs))
+        rows.append(Row(f"ruler_proxy/{name}", 0.0,
+                        f"avg={np.mean(accs):.3f} {derived}"))
+    return rows

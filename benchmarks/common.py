@@ -1,0 +1,124 @@
+"""Shared benchmark context: a tiny flux model trained on the synthetic
+mixture (cached across benches), timing helpers, CSV rows."""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.data import SyntheticTasks, mixture_iterator
+from repro.models import model as MD
+from repro.train import PretrainTrainer, RouterTrainer, checkpoint
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "bench")
+SEQ = 96
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def bench_cfg():
+    base = smoke_variant(get_config("phi3-mini-3.8b"))
+    return base.replace(
+        num_layers=4,  # a little depth so layer routing has room
+        vocab_size=64,
+        flux=base.flux.replace(sink=4, local=16, pool_size=8))
+
+
+_CTX = {}
+
+
+def trained_model(pre_steps: int = 450, router_steps: int = 120):
+    """Pretrained backbone + trained router (cached on disk)."""
+    if "model" in _CTX:
+        return _CTX["model"]
+    cfg = bench_cfg()
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    ck = os.path.join(CACHE_DIR, "bench_model.msgpack")
+    params = MD.init_params(jax.random.key(0), cfg)
+    if os.path.exists(ck):
+        params = checkpoint.load(ck, params)
+    else:
+        it = mixture_iterator(cfg.vocab_size, 16, SEQ, seed=0,
+                              weights={"markov": 0.5, "needle": 0.5})
+        pt = PretrainTrainer(cfg, total_steps=pre_steps, lr=3e-3)
+        st = pt.init(params)
+        st, _ = pt.run(st, it, pre_steps, log_every=10 ** 9,
+                       log_fn=lambda *_: None)
+        rt = RouterTrainer(cfg, total_steps=router_steps)
+        rstate = rt.init(st["params"])
+        rstate, _ = rt.run(rstate, it, router_steps, log_every=10 ** 9,
+                           log_fn=lambda *_: None)
+        params = rt.params(rstate)
+        checkpoint.save(ck, params)
+    _CTX["model"] = (cfg, params)
+    return _CTX["model"]
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+              **kw) -> float:
+    """Median wall-clock μs of fn(*args) (block_until_ready-aware)."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def eval_accuracy(cfg, params, task: str, *, pattern=None, n: int = 32,
+                  seq: int = SEQ, routing_ctx: Optional[str] = None,
+                  head_split_n: int = 0, needle_pos=None,
+                  seed: int = 42) -> float:
+    """Answer-token accuracy from prefill logits."""
+    gen = SyntheticTasks(cfg.vocab_size, seed=0)
+    rng = np.random.default_rng(seed)
+    kw = {}
+    if task == "needle" and needle_pos is not None:
+        kw["needle_pos"] = needle_pos
+    b = gen.batch(rng, task, n, seq, **kw)
+    toks = jnp.asarray(b.tokens)
+    if routing_ctx == "head_split":
+        out = MD.prefill(params, cfg, toks, routing_ctx="head_split",
+                         head_split_n=head_split_n, want_cache=False)
+    elif pattern is not None:
+        out = MD.prefill(params, cfg, toks, routing_ctx="fixed",
+                         fixed_pattern=jnp.asarray(pattern),
+                         want_cache=False)
+    elif routing_ctx:
+        out = MD.prefill(params, cfg, toks, routing_ctx=routing_ctx,
+                         want_cache=False)
+    else:
+        out = MD.prefill(params, cfg, toks, want_cache=False)
+    pred = np.asarray(jnp.argmax(out.logits, -1))
+    return float((pred == b.labels[:, -1]).mean())
+
+
+def live_msr(cfg, params, task: str, n: int = 16, seq: int = SEQ,
+             seed: int = 7) -> float:
+    """Ω_MSR realized by the live router on a task."""
+    gen = SyntheticTasks(cfg.vocab_size, seed=0)
+    b = gen.batch(np.random.default_rng(seed), task, n, seq)
+    out = MD.prefill(params, cfg, jnp.asarray(b.tokens),
+                     want_cache=False)
+    if out.routing is None:
+        return float("nan")
+    return float(1.0 - np.asarray(out.routing).mean())

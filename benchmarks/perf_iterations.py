@@ -1,0 +1,96 @@
+"""§Perf hillclimb driver: runs the three chosen (arch × shape) pairs
+through their optimization variants (each a subprocess of
+repro.launch.dryrun so the 512-device env stays isolated) and emits the
+before/after table for EXPERIMENTS.md.
+
+Targets (chosen from the baseline roofline table):
+  1. phi3-mini-3.8b × decode_32k — most representative of the paper's
+     decode claim; baseline is collective-bound on *weight* gathers.
+     Iterations: +decode-tp (row/column TP), then Ω_MSR ablation
+     (0 → 0.5 → 1) quantifying the paper's technique on the memory
+     term.
+  2. command-r-plus-104b × long_500k — sequence-sharded KV; iteration:
+     shard_map LSE-combine decode (+tp).
+  3. deepseek-v2-236b × prefill_32k — compute-bound (masked-rectangle
+     causal waste); iteration: recursive causal split depth 1..3.
+  plus command-r train_4k seq-shard ablation (most collective-bound
+  train step).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT = os.path.join(ROOT, "artifacts", "perf")
+
+ITERATIONS = [
+    # (arch, shape, extra flags, label)
+    ("phi3-mini-3.8b", "decode_32k", [], "baseline"),
+    ("phi3-mini-3.8b", "decode_32k", ["--decode-tp"], "decode-tp"),
+    ("phi3-mini-3.8b", "decode_32k",
+     ["--decode-tp", "--decode-msr", "0.0"], "decode-tp+allFA"),
+    ("phi3-mini-3.8b", "decode_32k",
+     ["--decode-tp", "--decode-msr", "1.0"], "decode-tp+allSA"),
+    ("command-r-plus-104b", "long_500k", [], "baseline"),
+    ("command-r-plus-104b", "long_500k", ["--decode-tp"], "decode-tp"),
+    ("command-r-plus-104b", "long_500k",
+     ["--decode-tp", "--distributed-kv"], "decode-tp+distkv"),
+    ("deepseek-v2-236b", "prefill_32k", [], "baseline"),
+    ("deepseek-v2-236b", "prefill_32k", ["--causal-split", "1"],
+     "causal-split-1"),
+    ("deepseek-v2-236b", "prefill_32k", ["--causal-split", "3"],
+     "causal-split-3"),
+    ("command-r-plus-104b", "train_4k", [], "baseline"),
+    ("command-r-plus-104b", "train_4k", ["--no-seq-shard"],
+     "no-seq-shard"),
+]
+
+
+def run_variant(arch: str, shape: str, flags: List[str],
+                label: str) -> Optional[Dict]:
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", OUT] + flags
+    print(f"--- {arch} × {shape} [{label}] ---", flush=True)
+    r = subprocess.run(cmd, env=env, cwd=ROOT, capture_output=True,
+                       text=True, timeout=3600)
+    print(r.stdout.strip().splitlines()[-2:] if r.stdout else r.stderr[-300:])
+    # locate the record (variant suffix included in mesh name)
+    recs = []
+    for f in os.listdir(OUT):
+        if f.startswith(f"{arch}_{shape}_") and f.endswith(".json"):
+            with open(os.path.join(OUT, f)) as fh:
+                recs.append((os.path.getmtime(os.path.join(OUT, f)),
+                             json.load(fh)))
+    recs.sort()
+    return recs[-1][1] if recs else None
+
+
+def main() -> None:
+    os.makedirs(OUT, exist_ok=True)
+    rows = ["arch,shape,variant,ok,t_compute_s,t_memory_s,"
+            "t_collective_s,bottleneck,hbm_bytes,coll_bytes"]
+    for arch, shape, flags, label in ITERATIONS:
+        rec = run_variant(arch, shape, flags, label)
+        if rec is None or not rec.get("ok"):
+            rows.append(f"{arch},{shape},{label},FAIL,,,,,,")
+            continue
+        rl = rec["roofline"]
+        rows.append(
+            f"{arch},{shape},{label},OK,{rl['t_compute_s']:.3e},"
+            f"{rl['t_memory_s']:.3e},{rl['t_collective_s']:.3e},"
+            f"{rl['bottleneck']},{rl['hbm_traffic_bytes_per_chip']},"
+            f"{rl['collective_bytes_per_chip']:.3e}")
+        print(rows[-1], flush=True)
+    with open(os.path.join(OUT, "perf_iterations.csv"), "w") as f:
+        f.write("\n".join(rows) + "\n")
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

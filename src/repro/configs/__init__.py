@@ -1,0 +1,39 @@
+"""Architecture configs (one module per assigned architecture)."""
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    FluxConfig,
+    InputShape,
+    ModelConfig,
+    get_config,
+    input_specs,
+    list_configs,
+    register,
+    smoke_variant,
+)
+
+# Importing the arch modules registers their CONFIGs.
+from repro.configs import (  # noqa: F401
+    command_r_plus_104b,
+    deepseek_v2_236b,
+    gemma3_12b,
+    granite_moe_3b_a800m,
+    jamba_1_5_large_398b,
+    mamba2_780m,
+    phi3_mini_3_8b,
+    phi_3_vision_4_2b,
+    stablelm_12b,
+    whisper_tiny,
+)
+
+ALL_ARCHS = (
+    "command-r-plus-104b",
+    "deepseek-v2-236b",
+    "mamba2-780m",
+    "whisper-tiny",
+    "stablelm-12b",
+    "phi-3-vision-4.2b",
+    "granite-moe-3b-a800m",
+    "phi3-mini-3.8b",
+    "gemma3-12b",
+    "jamba-1.5-large-398b",
+)

@@ -1,0 +1,343 @@
+"""Configuration system for the Flux Attention framework.
+
+Every assigned architecture gets one module in this package exposing
+``CONFIG: ModelConfig``.  Configs are frozen dataclasses so they can be
+used as static (hashable) arguments to ``jax.jit``.
+
+The four assigned input shapes live in ``SHAPES``; ``input_specs`` builds
+``jax.ShapeDtypeStruct`` stand-ins for every model input of a given
+(config, shape) pair — no device allocation, suitable for ``.lower()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Flux Attention (the paper's technique) configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FluxConfig:
+    """Configuration of the paper's layer-level FA/SA routing.
+
+    Defaults follow Table 3 of the paper, except ``block`` which is 128 on
+    TPU (MXU tile) instead of the paper's 64 (CUDA); see DESIGN.md §2.
+    """
+
+    enabled: bool = True
+    # Sparse-layer attention mode: "ssa" (StreamingLLM sink+local),
+    # "xa" (XAttention antidiagonal block-sparse), "ta" (Triangle).
+    sa_mode: str = "ssa"
+    # StreamingLLM-style geometry (paper: sink 128 / local 2048).
+    sink: int = 128
+    local: int = 2048
+    # Block-sparse geometry (paper: block 64 / chunk 16384 / stride 16 /
+    # threshold 0.9).  Block is 128 on TPU.
+    block: int = 128
+    chunk: int = 16384
+    stride: int = 16
+    threshold: float = 0.9
+    # Router (paper §3.1 / App. D.1): prefix-suffix pooling over the
+    # boundary ``pool_size`` tokens, Context-Encoder MLP, Router Head.
+    pool_size: int = 100
+    router_hidden: int = 128
+    # Gumbel-Softmax temperature annealing (paper §3.1).
+    tau_start: float = 5.0
+    tau_end: float = 0.1
+    # Target sparse budgets t (paper §4.1: holistic 1.0, retrieval 0.45).
+    target_retrieval: float = 0.45
+    target_holistic: float = 1.0
+    # Number of task categories carrying independent (λ1, λ2) multipliers.
+    num_task_types: int = 2
+
+    def replace(self, **kw) -> "FluxConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+# Block kinds appearing in ``layer_pattern``:
+#   "attn"   — global self attention (flux-routable)
+#   "local"  — sliding-window self attention (already sparse; not routed)
+#   "mamba"  — Mamba2 SSD block (attention-free; not routed)
+ATTN_KINDS = ("attn", "local")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | audio | vlm | hybrid
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+
+    # Layer pattern: repeated (cyclically) to cover ``num_layers``.
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    # Which layers get a MoE FFN instead of a dense FFN.  "all", "even",
+    # "none".  (Jamba applies MoE every second layer.)
+    moe_layers: str = "none"
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    # Expert capacity factor; >= num_experts ⇒ dropless (C clamps to T).
+    moe_capacity_factor: float = 1.25
+
+    # --- MLA (DeepSeek-V2) ---
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- SSM (Mamba2 SSD) ---
+    ssm_state_dim: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+
+    # --- Sliding window (gemma local layers) ---
+    sliding_window: int = 1024
+
+    # --- Encoder-decoder (whisper backbone) ---
+    num_encoder_layers: int = 0
+    encoder_ctx: int = 0  # number of (precomputed) audio frame embeddings
+
+    # --- VLM (phi-3-vision) ---
+    num_prefix_tokens: int = 0  # precomputed image patch embeddings
+
+    # --- Common ---
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # Expressed-FLOP reduction for causal FA in the pure-XLA path
+    # (§Perf): recursive sequence split depth (0 = off).
+    causal_split_depth: int = 0
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.bfloat16
+
+    flux: FluxConfig = field(default_factory=FluxConfig)
+
+    # ------------------------------------------------------------------
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Block kind for every layer (pattern repeated)."""
+        p = self.layer_pattern
+        return tuple(p[i % len(p)] for i in range(self.num_layers))
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.ssm_inner // self.ssm_head_dim if self.ssm_state_dim else 0
+
+    def moe_layer_mask(self) -> Tuple[bool, ...]:
+        if self.moe_layers == "all":
+            return tuple(True for _ in range(self.num_layers))
+        if self.moe_layers == "even":
+            return tuple(i % 2 == 0 for i in range(self.num_layers))
+        return tuple(False for _ in range(self.num_layers))
+
+    def routable_layers(self) -> Tuple[int, ...]:
+        """Indices of layers the Flux router controls (global attention)."""
+        return tuple(i for i, k in enumerate(self.layer_kinds) if k == "attn")
+
+    # --- parameter counting (for roofline MODEL_FLOPS = 6·N·D) ---
+    def param_count(self, active_only: bool = False) -> int:
+        d, L = self.d_model, self.num_layers
+        n = self.vocab_size * d  # embedding
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        for i, kind in enumerate(self.layer_kinds):
+            if kind in ("attn", "local"):
+                if self.use_mla:
+                    qr = self.q_lora_rank or d
+                    qk_hd = self.qk_nope_head_dim + self.qk_rope_head_dim
+                    n += d * qr + qr * self.num_heads * qk_hd  # q
+                    n += d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                    n += self.kv_lora_rank * self.num_heads * (
+                        self.qk_nope_head_dim + self.v_head_dim)
+                    n += self.num_heads * self.v_head_dim * d  # o
+                else:
+                    n += d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+            elif kind == "mamba":
+                inner = self.ssm_inner
+                nh = self.ssm_num_heads
+                # in_proj produces [z, x, B, C, dt]
+                n += d * (2 * inner + 2 * self.ssm_state_dim + nh)
+                n += inner * d  # out_proj
+                n += self.ssm_conv_width * (inner + 2 * self.ssm_state_dim)
+            # FFN
+            if self.moe_layer_mask()[i]:
+                per_expert = 3 * d * self.moe_d_ff
+                total_experts = self.num_experts + self.num_shared_experts
+                active = self.top_k + self.num_shared_experts
+                n += d * self.num_experts  # gate
+                n += per_expert * (active if active_only else total_experts)
+            else:
+                n += 3 * d * self.d_ff  # SwiGLU: gate, up, down
+            n += 2 * d  # norms
+        # encoder (whisper): self-attn + ffn; decoder additionally carries
+        # cross-attn (counted above only for self; add cross here)
+        for _ in range(self.num_encoder_layers):
+            n += 4 * d * self.q_dim + 3 * d * self.d_ff + 2 * d
+        if self.num_encoder_layers:
+            # decoder cross-attention per decoder layer
+            n += self.num_layers * (4 * d * self.q_dim + d)
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of (cfg, shape).
+
+    ``train``   → tokens + labels + task_type (for the router's Lagrangian).
+    ``prefill`` → tokens (+ modality prefix embeddings).
+    ``decode``  → one new token per sequence + cache position.
+    (Decode KV-cache specs are built by ``repro.serve.kv_cache.cache_specs``
+    because their shapes depend on the routing pattern.)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["task_type"] = jax.ShapeDtypeStruct((B,), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:  # decode
+        specs["token"] = jax.ShapeDtypeStruct((B, 1), i32)
+        specs["cache_len"] = jax.ShapeDtypeStruct((), i32)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["prefix_embeddings"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_prefix_tokens, cfg.d_model), cfg.dtype)
+    if cfg.family == "audio":
+        specs["encoder_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_ctx, cfg.d_model), cfg.dtype)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Registry + smoke variants
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    # Import arch modules lazily so ``register`` runs.
+    from repro.configs import ALL_ARCHS  # noqa: F401
+
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> Tuple[str, ...]:
+    from repro.configs import ALL_ARCHS  # noqa: F401
+
+    return tuple(sorted(_REGISTRY))
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant: 2 layers, d_model<=512, <=4 experts.
+
+    Used by per-arch smoke tests to run a real forward/train step on CPU.
+    """
+    num_layers = min(cfg.num_layers, 2 * len(cfg.layer_pattern))
+    # Keep the pattern but at most one period (so every kind is exercised)
+    # while staying tiny: cap at len(pattern) or 2, whichever is bigger.
+    num_layers = min(num_layers, max(2, len(cfg.layer_pattern)))
+    d_model = min(cfg.d_model, 256)
+    head_dim = 32
+    num_heads = 4
+    num_kv_heads = min(cfg.num_kv_heads, 2) if cfg.num_kv_heads < cfg.num_heads else 4
+    kw: Dict[str, Any] = dict(
+        num_layers=num_layers,
+        d_model=d_model,
+        num_heads=num_heads,
+        num_kv_heads=num_kv_heads,
+        head_dim=head_dim,
+        d_ff=min(cfg.d_ff, 512) or 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        dtype=jnp.float32,
+        param_dtype=jnp.float32,
+        flux=cfg.flux.replace(
+            sink=8, local=32, block=16, chunk=64, pool_size=8,
+            router_hidden=16, stride=4),
+        sliding_window=16,
+    )
+    if cfg.num_experts:
+        kw.update(num_experts=min(cfg.num_experts, 4),
+                  top_k=min(cfg.top_k, 2),
+                  num_shared_experts=min(cfg.num_shared_experts, 1),
+                  moe_d_ff=min(cfg.moe_d_ff, 128),
+                  # dropless in smoke tests: decode/prefill consistency
+                  # is exact (capacity drops are a large-scale trade-off)
+                  moe_capacity_factor=float(min(cfg.num_experts, 4)))
+    if cfg.use_mla:
+        kw.update(q_lora_rank=64, kv_lora_rank=32,
+                  qk_nope_head_dim=32, qk_rope_head_dim=16, v_head_dim=32)
+    if cfg.ssm_state_dim:
+        kw.update(ssm_state_dim=16, ssm_head_dim=32, ssm_chunk=16)
+    if cfg.num_encoder_layers:
+        kw.update(num_encoder_layers=2, encoder_ctx=16)
+    if cfg.num_prefix_tokens:
+        kw.update(num_prefix_tokens=8)
+    return cfg.replace(**kw)

@@ -1,0 +1,1 @@
+from repro.core import modes, router, sparsity  # noqa: F401

@@ -1,0 +1,115 @@
+"""Static sparsity baselines the paper compares against (§2.2, §4.1):
+
+  * TriangleMix [14]     — static *layer* pattern: deep layers sparse.
+  * DuoAttention [43/44] — static *head* split: retrieval heads FA,
+                           streaming heads sink+local.
+  * PruLong [4]          — same mechanism class as DuoAttention here
+                           (trained head masks); emulated with a
+                           different head ordering (entropy-scored).
+  * UnComp entropy [46]  — matrix-entropy layer ranking used in the
+                           paper's §2.3 motivation study: lowest-entropy
+                           layers are sparsified first.
+
+All return either a per-layer pattern array (1=FA, 0=SA) or a routing
+context for the model's ``("head_split", n_fa_kv)`` path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Layer-level static patterns
+# ---------------------------------------------------------------------------
+
+def static_pattern(cfg: ModelConfig, msr: float,
+                   placement: str = "deep") -> np.ndarray:
+    """(num_layers,) 1=FA / 0=SA with SA fraction ``msr`` over *routed*
+    layers.  placement ∈ {"deep" (TriangleMix), "shallow",
+    "interleave"}."""
+    routed = list(cfg.routable_layers())
+    n_sa = int(round(msr * len(routed)))
+    pattern = np.ones((cfg.num_layers,), np.int32)
+    if n_sa == 0:
+        return pattern
+    if placement == "deep":
+        sa_layers = routed[-n_sa:]
+    elif placement == "shallow":
+        sa_layers = routed[:n_sa]
+    elif placement == "interleave":
+        idx = np.linspace(0, len(routed) - 1, n_sa).round().astype(int)
+        sa_layers = [routed[i] for i in idx]
+    else:
+        raise ValueError(placement)
+    pattern[list(sa_layers)] = 0
+    return pattern
+
+
+def trianglemix_pattern(cfg: ModelConfig, msr: float = 0.5) -> np.ndarray:
+    """TriangleMix: shallow layers dense, deep layers triangle-sparse
+    (use with flux.sa_mode="ta")."""
+    return static_pattern(cfg, msr, "deep")
+
+
+# ---------------------------------------------------------------------------
+# UnComp matrix-entropy layer ranking (paper App. C)
+# ---------------------------------------------------------------------------
+
+def matrix_entropy(hidden: jax.Array, k_trunc: int = 32) -> jax.Array:
+    """Truncated von Neumann entropy of the trace-normalized covariance.
+
+    hidden (B, S, d) → scalar.  Eigenvalues of X·Xᵀ/tr come from the
+    singular values of X.
+    """
+    B, S, d = hidden.shape
+    x = hidden.reshape(B * S, d).astype(jnp.float32)
+    x = x - x.mean(0, keepdims=True)
+    s = jnp.linalg.svd(x, compute_uv=False)  # (min(BS, d),)
+    lam = jnp.square(s)
+    lam = lam / jnp.maximum(lam.sum(), 1e-12)
+    k = min(k_trunc, lam.shape[0])
+    top = jax.lax.top_k(lam, k)[0]
+    return -jnp.sum(top * jnp.log(top + 1e-12))
+
+
+def entropy_scores(params, cfg: ModelConfig, tokens: jax.Array,
+                   k_trunc: int = 32, **fwd_kw) -> np.ndarray:
+    """Per-layer entropy E_ℓ over a probe batch (paper Eq. 7)."""
+    from repro.models import model as MD
+
+    hs = MD.capture_hidden(params, cfg, tokens, **fwd_kw)  # (L, B, S, d)
+    return np.asarray(
+        jnp.stack([matrix_entropy(hs[i], k_trunc)
+                   for i in range(hs.shape[0])]))
+
+
+def entropy_pattern(cfg: ModelConfig, scores: Sequence[float],
+                    msr: float) -> np.ndarray:
+    """Progressive sparsification (paper App. C.2): keep the
+    k = ⌊(1-Ω)·L⌋ highest-entropy routed layers as FA."""
+    routed = list(cfg.routable_layers())
+    sc = np.asarray([scores[i] for i in routed])
+    k_keep = int((1.0 - msr) * len(routed))
+    order = np.argsort(-sc)  # descending entropy
+    pattern = np.zeros((cfg.num_layers,), np.int32)
+    for i, kind in enumerate(cfg.layer_kinds):
+        if kind != "attn":
+            pattern[i] = 1
+    for j in order[:k_keep]:
+        pattern[routed[j]] = 1
+    return pattern
+
+
+# ---------------------------------------------------------------------------
+# Head-level baselines (DuoAttention / PruLong)
+# ---------------------------------------------------------------------------
+
+def duo_n_fa_kv(cfg: ModelConfig, msr: float = 0.5) -> int:
+    """Retrieval KV-head count for a target head sparsity."""
+    return max(1, int(round((1.0 - msr) * cfg.num_kv_heads)))

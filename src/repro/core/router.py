@@ -1,0 +1,80 @@
+"""The paper's Layer Router (§3.1).
+
+Prefill-Suffix Pooling over the boundary ``pool_size`` tokens of the
+layer's incoming query tensor → Context-Encoder MLP → Router-Head MLP →
+2 routing logits (π_FA, π_SA).  Training uses Gumbel-Softmax soft
+routing (Eq. 4); inference takes the argmax (hard routing, §3.3).
+
+Router params are kept in float32: they are tiny (~2·d·hidden) and the
+Gumbel relaxation is numerically touchy in bf16.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FluxConfig
+from repro.models.layers import dense_init
+
+
+def router_init(key, in_dim: int, flux: FluxConfig) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    h = flux.router_hidden
+    return {
+        "enc_w": dense_init(k1, 2 * in_dim, h, jnp.float32),
+        "enc_b": jnp.zeros((h,), jnp.float32),
+        "head_w1": dense_init(k2, h, h, jnp.float32),
+        "head_b1": jnp.zeros((h,), jnp.float32),
+        "head_w2": dense_init(k3, h, 2, jnp.float32),
+        "head_b2": jnp.zeros((2,), jnp.float32),
+    }
+
+
+def pool_prefix_suffix(x_q: jax.Array, pool_size: int) -> jax.Array:
+    """(B, S, F) → (B, 2F): mean over the first / last ``pool_size`` tokens.
+
+    Length-invariant by construction (paper Fig. 9): cost depends on
+    ``pool_size``, not S.
+    """
+    p = min(pool_size, x_q.shape[1])
+    prefix = jnp.mean(x_q[:, :p].astype(jnp.float32), axis=1)
+    suffix = jnp.mean(x_q[:, -p:].astype(jnp.float32), axis=1)
+    return jnp.concatenate([prefix, suffix], axis=-1)
+
+
+def router_logits(params: Dict[str, jax.Array], x_q: jax.Array,
+                  pool_size: int) -> jax.Array:
+    """x_q (B, S, F) → logits (B, 2) = (π_FA, π_SA)."""
+    pooled = pool_prefix_suffix(x_q, pool_size)
+    h = jax.nn.gelu(pooled @ params["enc_w"] + params["enc_b"])
+    h = jax.nn.gelu(h @ params["head_w1"] + params["head_b1"])
+    return h @ params["head_w2"] + params["head_b2"]
+
+
+def soft_route(params: Dict[str, jax.Array], x_q: jax.Array,
+               flux: FluxConfig, tau, rng) -> jax.Array:
+    """Gumbel-Softmax relaxed routing weight r_soft ∈ (0,1) — the
+    probability of selecting FA (paper Eq. 4).  Returns (B,)."""
+    logits = router_logits(params, x_q, flux.pool_size)  # (B, 2)
+    g = jax.random.gumbel(rng, logits.shape, jnp.float32)
+    z = (logits + g) / jnp.maximum(tau, 1e-6)
+    return jax.nn.softmax(z, axis=-1)[:, 0]
+
+
+def hard_route(params: Dict[str, jax.Array], x_q: jax.Array,
+               flux: FluxConfig) -> Tuple[jax.Array, jax.Array]:
+    """Deterministic inference routing (§3.3).
+
+    Returns (r_hard (B,) ∈ {0,1} with 1 = FA, p_fa (B,) the underlying
+    probability, useful for logging/consensus)."""
+    logits = router_logits(params, x_q, flux.pool_size)
+    p_fa = jax.nn.softmax(logits, axis=-1)[:, 0]
+    return (logits[:, 0] > logits[:, 1]).astype(jnp.int32), p_fa
+
+
+def anneal_tau(flux: FluxConfig, step, total_steps: int) -> jax.Array:
+    """Linear temperature decay (paper §3.1)."""
+    frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+    return flux.tau_start + (flux.tau_end - flux.tau_start) * frac

@@ -1,0 +1,84 @@
+"""Sparsity metrics and the Lagrangian training objective (paper §2.3, §3.2).
+
+Ω_MSR (Eq. 3) — fraction of (layer, head) slots running SA.  With
+layer-level routing every head in a layer shares the decision, so the
+model-level ratio reduces to the SA fraction over routed layers.
+
+Constraint (Eq. 6): per task type, L_diff = E[1 - r_soft] - t, penalized
+by λ1·L_diff + λ2·L_diff² with **trainable** multipliers λ1, λ2 ≥ 0
+updated by gradient *ascent* (sign-flipped in the optimizer; see
+repro.train.optimizer).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FluxConfig
+
+# Task-type ids for the Lagrangian (paper trains per-task multipliers).
+TASK_RETRIEVAL = 0
+TASK_HOLISTIC = 1
+
+
+def msr(r_hard: jax.Array) -> jax.Array:
+    """Model Sparsity Ratio over routed layers.
+
+    r_hard: (..., num_routed_layers) with 1 = FA, 0 = SA.
+    """
+    return jnp.mean(1.0 - r_hard.astype(jnp.float32), axis=-1)
+
+
+def lagrangian_init(flux: FluxConfig, key=None) -> Dict[str, jax.Array]:
+    """λ1, λ2 per task type.  Paper: randomly initialized, then adapted
+    by ascent.  The quadratic multiplier starts at a scale where the
+    budget exerts visible pressure within a few hundred steps (the
+    ascent keeps growing it while |L_diff| > 0)."""
+    n = flux.num_task_types
+    if key is not None:
+        k1, k2 = jax.random.split(key)
+        return {"lambda1": jax.random.uniform(k1, (n,), jnp.float32,
+                                              0.0, 0.2),
+                "lambda2": jax.random.uniform(k2, (n,), jnp.float32,
+                                              0.2, 0.6)}
+    return {"lambda1": jnp.full((n,), 0.1, jnp.float32),
+            "lambda2": jnp.full((n,), 0.4, jnp.float32)}
+
+
+def target_table(flux: FluxConfig) -> jax.Array:
+    """Per-task sparse budget t (paper §4.1: retrieval 0.45, holistic 1.0)."""
+    return jnp.array([flux.target_retrieval, flux.target_holistic],
+                     jnp.float32)
+
+
+def sparsity_loss(r_soft: jax.Array, task_type: jax.Array,
+                  lagrange: Dict[str, jax.Array],
+                  flux: FluxConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Sparsity regularization term of Eq. 6.
+
+    r_soft: (B, num_routed_layers) FA probabilities; task_type: (B,) int.
+    Returns (scalar loss, diagnostics).  The λs enter the loss directly;
+    the optimizer ascends on them (max_λ min_θ).
+    """
+    t = target_table(flux)[task_type]  # (B,)
+    sparse_prob = jnp.mean(1.0 - r_soft, axis=-1)  # (B,) expected SA fraction
+    # Per-task expectation E_X[1 - r_soft] - t, masked means per task type.
+    n_types = flux.num_task_types
+    onehot = jax.nn.one_hot(task_type, n_types, dtype=jnp.float32)  # (B, T)
+    counts = jnp.maximum(onehot.sum(0), 1.0)
+    per_task_sparse = (onehot * sparse_prob[:, None]).sum(0) / counts
+    per_task_t = (onehot * t[:, None]).sum(0) / counts
+    l_diff = per_task_sparse - per_task_t  # (T,)
+    present = (onehot.sum(0) > 0).astype(jnp.float32)
+    loss = jnp.sum(present * (lagrange["lambda1"] * l_diff
+                              + lagrange["lambda2"] * jnp.square(l_diff)))
+    diag = {"l_diff": l_diff, "per_task_sparsity": per_task_sparse,
+            "present": present}
+    return loss, diag
+
+
+def project_lagrange(lagrange: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Enforce λ ≥ 0 after the ascent step."""
+    return {k: jnp.maximum(v, 0.0) for k, v in lagrange.items()}

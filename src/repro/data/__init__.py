@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    Batch,
+    SyntheticTasks,
+    mixture_iterator,
+    retrieval_accuracy,
+)

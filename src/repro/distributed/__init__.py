@@ -1,0 +1,1 @@
+from repro.distributed.sharding import constrain, logical_rules  # noqa: F401

@@ -1,0 +1,85 @@
+"""Mesh-agnostic sharding hints.
+
+Model code calls ``constrain(x, *axes)`` with *logical* axis names; the
+launch layer activates a mesh (``jax.sharding.use_mesh``) and a logical→
+mesh-axis mapping (``logical_rules``).  Outside any mesh context the
+hints are no-ops, so unit tests and CPU smoke runs are unaffected.
+
+Divisibility is checked per dimension against the live (abstract) mesh:
+axes that do not evenly divide a dim are dropped (e.g. 8 KV heads on a
+16-way "model" axis → replicated KV, the standard GQA-TP fallback).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, Optional[Tuple[str, ...]]]]:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def logical_rules(rules: Dict[str, Optional[Tuple[str, ...]]]):
+    """Activate a logical→mesh axis mapping (launch layer only)."""
+    prev = _rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def _live_mesh():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if mesh is None or getattr(mesh, "empty", True) or not mesh.axis_names:
+        return None
+    return mesh
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without an
+    active mesh context or rule set."""
+    rules = _rules()
+    if rules is None:
+        return x
+    mesh = _live_mesh()
+    if mesh is None:
+        return x
+    spec = []
+    used: set = set()  # a mesh axis may shard at most one dim
+    for dim, a in zip(x.shape, axes):
+        mapped = rules.get(a) if a is not None else None
+        if mapped is None:
+            spec.append(None)
+            continue
+        usable = [ax for ax in mapped
+                  if ax in mesh.axis_names and ax not in used]
+        total = int(np.prod([mesh.shape[ax] for ax in usable])) if usable \
+            else 0
+        if usable and total and dim % total == 0 and dim >= total:
+            used.update(usable)
+            spec.append(tuple(usable) if len(usable) > 1 else usable[0])
+            continue
+        picked = None  # single-axis fallback
+        for ax in usable:
+            s = mesh.shape[ax]
+            if dim % s == 0 and dim >= s:
+                picked = ax
+                used.add(ax)
+                break
+        spec.append(picked)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, TypeError):
+        return x

@@ -1,0 +1,7 @@
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    block_sparse_attention,
+    decode_attention,
+    flash_attention,
+    streaming_attention,
+)

@@ -1,0 +1,102 @@
+"""Pallas TPU flash-decode kernel: one query token vs a KV cache.
+
+Split-KV with LSE accumulation: the grid's inner axis walks KV blocks;
+VMEM scratch carries (acc, m, l).  Works for both the FullKV cache
+(positions = arange, validity = pos ≤ cur) and the sink+local RingKV
+cache (positions = ring slots' absolute positions, -1 = empty) — the
+mask comes from a (L,) positions array, so one kernel serves every
+decode mode of the paper's sparse-decode deployment (§3.3).
+
+The decode phase is memory-bandwidth bound; the kernel's useful work
+per HBM byte is fixed, so the paper's speedup comes from the *shape*
+of the cache this kernel is pointed at (ring ≪ full), not from the
+kernel itself — exactly the layer-level contiguity argument.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, cur_ref, o_ref, acc, m_scr, l_scr,
+            *, scale: float, block_k: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (1, D) — single token
+    k = k_ref[0].astype(jnp.float32)          # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = pos_ref[...]                        # (1, bk) int32
+    cur = cur_ref[0, 0]
+    mask = (pos >= 0) & (pos <= cur)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+    acc[...] = acc[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fin():
+        o_ref[0] = (acc[...] / jnp.maximum(l_scr[...], 1e-20)
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array,
+                        positions: jax.Array, cur_pos, *,
+                        scale: Optional[float] = None, block_k: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q (BH, 1, D); k/v (BHkv, L, D); positions (L,) int32 (-1 empty);
+    cur_pos scalar int32.  Returns (BH, 1, D)."""
+    BH, _, D = q.shape
+    BHkv, L = k.shape[0], k.shape[1]
+    G = BH // BHkv
+    scale = D ** -0.5 if scale is None else scale
+    L_p = -(-L // block_k) * block_k
+    k = jnp.pad(k, ((0, 0), (0, L_p - L), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, L_p - L), (0, 0)))
+    pos = jnp.pad(positions.astype(jnp.int32), (0, L_p - L),
+                  constant_values=-1)[None, :]  # (1, L_p)
+    cur = jnp.asarray(cur_pos, jnp.int32).reshape(1, 1)
+    grid = (BH, L_p // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, j: (b // G, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, j: (b // G, j, 0)),
+            pl.BlockSpec((1, block_k), lambda b, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda b, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, pos, cur)
+    return out

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every kernel (independent of core.modes).
+
+Each builds the full (Sq, Skv) mask and does a dense masked softmax —
+O(S²) memory, test scale only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _masked_attention(q, k, v, mask, scale=None):
+    """q (BH,Sq,D); k/v (BHkv,Skv,D); mask (Sq,Skv) or (BH,Sq,Skv)."""
+    BH, Sq, D = q.shape
+    BHkv = k.shape[0]
+    G = BH // BHkv
+    scale = D ** -0.5 if scale is None else scale
+    q4 = q.reshape(BHkv, G, Sq, D)
+    s = jnp.einsum("hgqd,hkd->hgqk", q4.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if mask.ndim == 3:
+        mask = mask.reshape(BHkv, G, *mask.shape[1:])
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hgqk,hkd->hgqd", p, v.astype(jnp.float32))
+    return o.reshape(BH, Sq, D).astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, q_offset=0, scale=None):
+    Sq, Skv = q.shape[1], k.shape[1]
+    qp = q_offset + jnp.arange(Sq)
+    kp = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = kp[None, :] <= qp[:, None]
+    return _masked_attention(q, k, v, mask, scale)
+
+
+def streaming_attention_ref(q, k, v, *, sink, local, q_offset=0,
+                            scale=None):
+    Sq, Skv = q.shape[1], k.shape[1]
+    qp = q_offset + jnp.arange(Sq)
+    kp = jnp.arange(Skv)
+    causal = kp[None, :] <= qp[:, None]
+    window = (qp[:, None] - kp[None, :]) < local
+    sink_m = kp[None, :] < sink
+    return _masked_attention(q, k, v, causal & (window | sink_m), scale)
+
+
+def decode_attention_ref(q, k, v, positions, cur_pos, scale=None):
+    """q (BH,1,D); k/v (BHkv,L,D); positions (L,)."""
+    valid = (positions >= 0) & (positions <= cur_pos)
+    return _masked_attention(q, k, v, valid[None, :], scale)
+
+
+def block_sparse_attention_ref(q, k, v, sel, *, block, scale=None):
+    """sel (BH, nqb, K) — oracle expands selection to a dense mask."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    nqb = sel.shape[1]
+    nkb = -(-Skv // block)
+    # (BH, nqb, nkb) block visibility
+    blk_mask = jnp.zeros((BH, nqb, nkb + 1), bool)
+    sel_c = jnp.where(sel >= 0, sel, nkb)  # park invalid at the pad slot
+    blk_mask = blk_mask.at[
+        jnp.arange(BH)[:, None, None], jnp.arange(nqb)[None, :, None],
+        sel_c].set(True)[:, :, :nkb]
+    mask = jnp.repeat(jnp.repeat(blk_mask, block, 1), block, 2)
+    mask = mask[:, :Sq, :Skv]
+    qp, kp = jnp.arange(Sq), jnp.arange(Skv)
+    mask &= (kp[None, :] <= qp[:, None])[None]
+    return _masked_attention(q, k, v, mask, scale)

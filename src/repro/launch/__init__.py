@@ -1,0 +1,7 @@
+from repro.launch.mesh import (  # noqa: F401
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_debug_mesh,
+    make_production_mesh,
+)

@@ -1,0 +1,242 @@
+"""Loop-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` body's FLOPs are not multiplied by the trip count, and
+both branches of a ``lax.cond`` are summed (calibrated in
+EXPERIMENTS.md §Dry-run).  For a framework whose trunk is a scan over
+layer periods and whose attention is a scan over query blocks, that
+undercounts compute by orders of magnitude and silently miscounts
+collectives inside the loop.
+
+This module re-derives matmul FLOPs and collective bytes by walking the
+post-optimization HLO text:
+
+  * per-computation local costs (dot ops → 2·M·N·K; collective ops →
+    output bytes),
+  * ``fusion``/``call`` sites add the called computation's cost,
+  * ``while`` sites multiply the body by the trip count inferred from
+    the loop condition's compare-against-constant,
+  * ``conditional`` sites take the MAX across branches (one branch
+    executes at runtime — exactly the flux hard-routing semantics).
+
+Elementwise FLOPs are ignored (dots dominate the compute roofline term
+on the MXU); HBM traffic is taken from memory_analysis + the
+analytical model instead (see hlo_analysis.roofline_terms).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+# header lines start at column 0: ``%name (args) -> type {`` — the arg
+# list may contain nested parens (tuple types), so match loosely and
+# require the trailing "{".
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\S+(?:\s*\([^)]*\))?)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%([\w.\-]+)")
+_WHILE = re.compile(r"condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+_COND_BRANCHES = re.compile(
+    r"(?:true_computation=%([\w.\-]+),\s*false_computation=%([\w.\-]+)"
+    r"|branch_computations=\{([^}]*)\})")
+_CONST = re.compile(r"constant\((\d+)\)")
+_DOT_DIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+
+def _parse_shape(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _parse_shape(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(text: str) -> int:
+    shapes = _parse_shape(text)
+    if not shapes:
+        return 0
+    n = 1
+    for d in shapes[0][1]:
+        n *= d
+    return n
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.coll_bytes += o.coll_bytes
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.coll_bytes * f,
+                    {k: v * f for k, v in self.coll_by_kind.items()})
+
+
+@dataclass
+class _Line:
+    name: str
+    result_type: str
+    op_text: str
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        self._split(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    # -- parsing -----------------------------------------------------------
+    def _split(self, text: str) -> None:
+        cur = None
+        buf: List[str] = []
+        for line in text.splitlines():
+            m = _COMP_HDR.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                if line.startswith("ENTRY"):
+                    self.entry = cur
+                buf = []
+                self.computations[cur] = buf
+            elif cur is not None:
+                if line.startswith("}"):
+                    cur = None
+                else:
+                    buf.append(line)
+
+    # -- trip count --------------------------------------------------------
+    def trip_count(self, cond_comp: str) -> int:
+        """Largest integer constant in the loop condition (jax scans
+        count 0..N-1 with an LT compare); 1 if none found."""
+        best = 1
+        seen = set()
+
+        def walk(name):
+            if name in seen or name not in self.computations:
+                return
+            seen.add(name)
+            for line in self.computations[name]:
+                for c in _CONST.findall(line):
+                    best_local = int(c)
+                    nonlocal best
+                    best = max(best, best_local)
+                for called in _CALLS.findall(line):
+                    walk(called)
+
+        walk(cond_comp)
+        return best
+
+    # -- per-line costs ------------------------------------------------------
+    def _line_cost(self, line: str) -> Cost:
+        c = Cost()
+        m = _DEF.match(line)
+        if not m:
+            return c
+        body = line[m.end(1):]
+        # dot flops: 2 · prod(result dims) · K  (K = contracted size)
+        if re.search(r"=\s*\S+\s+dot\(", line) or " dot(" in line:
+            result_elems = _shape_elems(line.split("=", 1)[1])
+            k = self._dot_contracted_size(line)
+            c.flops += 2.0 * result_elems * k
+        for kind in _COLLECTIVE_KINDS:
+            if re.search(rf"\s{kind}(-start)?\(", line):
+                b = _shape_bytes(line.split("=", 1)[1].split("(", 1)[0])
+                c.coll_bytes += b
+                c.coll_by_kind[kind] = c.coll_by_kind.get(kind, 0) + b
+                break
+        return c
+
+    def _dot_contracted_size(self, line: str) -> int:
+        m = _DOT_DIMS.search(line)
+        if not m:
+            return 1
+        dims = [int(d) for d in m.group(1).split(",") if d]
+        # lhs operand is the first argument of dot(...)
+        call = line.split(" dot(", 1)[1]
+        first_op = call.split(",")[0].strip().lstrip("%").rstrip(")")
+        shape = self._operand_shapes.get(first_op)
+        if shape is None:
+            return 1
+        k = 1
+        for d in dims:
+            if d < len(shape):
+                k *= shape[d]
+        return k
+
+    # -- computation cost ----------------------------------------------------
+    def computation_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # cycle guard
+        total = Cost()
+        lines = self.computations.get(name, [])
+        # operand shape env for dot contraction sizing
+        self._operand_shapes = getattr(self, "_operand_shapes", {})
+        for line in lines:
+            m = _DEF.match(line)
+            if m:
+                shapes = _parse_shape(line.split("=", 1)[1].split("(")[0])
+                if shapes:
+                    self._operand_shapes[m.group(1)] = shapes[0][1]
+        for line in lines:
+            total += self._line_cost(line)
+            w = _WHILE.search(line)
+            if w and " while(" in line:
+                cond, body = w.group(1), w.group(2)
+                trips = self.trip_count(cond)
+                total += self.computation_cost(body).scaled(trips)
+                total += self.computation_cost(cond).scaled(trips)
+                continue
+            cb = _COND_BRANCHES.search(line)
+            if cb and " conditional(" in line:
+                branches = ([cb.group(1), cb.group(2)] if cb.group(1)
+                            else [b.strip().lstrip("%") for b in
+                                  cb.group(3).split(",")])
+                costs = [self.computation_cost(b) for b in branches if b]
+                if costs:
+                    # one branch runs at runtime → max (hard routing)
+                    best = max(costs, key=lambda x: x.flops)
+                    total += best
+                continue
+            for called in _CALLS.findall(line):
+                total += self.computation_cost(called)
+        self._memo[name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.computation_cost(self.entry)
+
+
+def loop_aware_costs(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).entry_cost()

@@ -1,0 +1,229 @@
+"""Sharding assignment for the production mesh.
+
+Strategy (DESIGN.md §5):
+  * Weights — 2-D sharded: one dim on "model" (tensor parallel), the
+    largest remaining divisible dim on ("pod","data") (FSDP).  Stacked
+    trunk leaves skip their leading n_periods axis.
+  * Batch activations — batch over ("pod","data").
+  * Sequence ("seq" logical axis) — "model" during training/prefill
+    (Megatron-SP-style residual sharding: the scan-saved activations
+    are the memory driver at 100B scale).
+  * Decode KV caches — batch over data; when the batch axis can't
+    cover the mesh (long_500k, B=1) the *sequence* dim shards over
+    ("data","model") and attention runs over sequence-sharded KV
+    (baseline lets SPMD place collectives; the shard_map LSE-combine
+    decode in repro/distributed/decode.py is the optimized path).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return fsdp_axes(mesh)
+
+
+def axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _spec_tuple(t: Tuple[str, ...]):
+    return t if len(t) > 1 else (t[0] if t else None)
+
+
+def param_spec(shape: Tuple[int, ...], mesh: Mesh,
+               skip_leading: int = 0) -> P:
+    """Model-then-FSDP 2-D weight sharding by divisibility."""
+    model = mesh.shape.get("model", 1)
+    fs = fsdp_axes(mesh)
+    fs_size = axes_size(mesh, fs)
+    spec: list = [None] * len(shape)
+    dims = list(range(skip_leading, len(shape)))
+    # 'model' on the last divisible dim (output features / heads / ffn)
+    model_dim = None
+    for d in reversed(dims):
+        if shape[d] % model == 0 and shape[d] >= model:
+            model_dim = d
+            spec[d] = "model"
+            break
+    # FSDP on the largest remaining divisible dim
+    rest = [d for d in dims if d != model_dim]
+    rest.sort(key=lambda d: -shape[d])
+    for d in rest:
+        if shape[d] % fs_size == 0 and shape[d] >= fs_size:
+            spec[d] = _spec_tuple(fs)
+            break
+    return P(*spec)
+
+
+def param_shardings(params_spec, mesh: Mesh):
+    """NamedSharding tree for the params pytree (eval_shape output)."""
+    def assign(path, leaf):
+        stacked = any(getattr(p, "key", None) in ("trunk", "layers")
+                      for p in path)
+        skip = 1 if stacked else 0
+        if len(leaf.shape) <= skip:  # scalars / stacked scalars
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, param_spec(leaf.shape, mesh, skip))
+
+    return jax.tree_util.tree_map_with_path(assign, params_spec)
+
+
+# Megatron-style row-parallel weights: output/down projections contract
+# over the sharded dim, producing partial sums that all-reduce — the
+# activation (B,1,d) is tiny at decode.  Everything else is
+# column-parallel (output-dim sharded).
+ROW_PARALLEL_NAMES = frozenset({"wo", "down", "out_proj", "w_ukv"})
+# Attention projections must stay head-aligned: TP over "model" only
+# (a full-mesh split would shard inside head_dim and un-localize the
+# attention math — observed 6× collective blow-up at B=1).
+ATTN_PARAM_NAMES = frozenset({"wq", "wk", "wv", "wo", "w_dq", "w_uq",
+                              "w_dkv", "w_kr", "w_ukv", "in_proj",
+                              "out_proj", "conv_w"})
+
+
+def param_spec_decode_tp(shape: Tuple[int, ...], mesh: Mesh,
+                         skip_leading: int = 0,
+                         row_parallel: bool = False,
+                         model_only: bool = False) -> P:
+    """Serving-time weight sharding: full tensor-parallel over the WHOLE
+    mesh on one dim, NO FSDP dim.
+
+    FSDP weight sharding re-gathers every weight on every decode step
+    (found in the baseline HLO: 2.5 GB of f32 weight all-gathers per
+    step for phi3 — EXPERIMENTS.md §Perf).  With weights TP-sharded
+    column-parallel (and down/out projections row-parallel so partial
+    products all-reduce), the per-step collectives shrink to activation
+    psums of (B,1,d)."""
+    all_axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+    spec: list = [None] * len(shape)
+    dims = list(range(skip_leading, len(shape)))
+    order = dims if row_parallel else list(reversed(dims))
+    model_axes = ("model",) if "model" in mesh.axis_names else ()
+    candidates = ((model_axes,) if model_only
+                  else (all_axes, model_axes))
+    for axes in candidates:
+        if not axes:
+            continue
+        size = axes_size(mesh, tuple(axes))
+        for d in order:
+            if shape[d] % size == 0 and shape[d] >= size:
+                spec[d] = _spec_tuple(tuple(axes))
+                return P(*spec)
+    return P(*spec)
+
+
+def param_shardings_decode_tp(params_spec, mesh: Mesh):
+    def assign(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", "")))
+                 for p in path]
+        stacked = any(n in ("trunk", "layers") for n in names)
+        skip = 1 if stacked else 0
+        if len(leaf.shape) <= skip:
+            return NamedSharding(mesh, P())
+        row = bool(set(names) & ROW_PARALLEL_NAMES)
+        attn = bool(set(names) & ATTN_PARAM_NAMES)
+        return NamedSharding(
+            mesh, param_spec_decode_tp(leaf.shape, mesh, skip,
+                                       row_parallel=row,
+                                       model_only=attn))
+
+    return jax.tree_util.tree_map_with_path(assign, params_spec)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, shape: Tuple[int, ...]) -> NamedSharding:
+    """(B, ...) arrays: batch over ("pod","data") when divisible."""
+    ba = batch_axes(mesh)
+    if shape and shape[0] % axes_size(mesh, ba) == 0 and shape[0] > 1:
+        return NamedSharding(mesh, P(_spec_tuple(ba),
+                                     *([None] * (len(shape) - 1))))
+    return NamedSharding(mesh, P())
+
+
+def cache_shardings(caches_spec, mesh: Mesh, batch: int):
+    """Decode-cache tree: batch-sharded when possible; otherwise the
+    long sequence dim shards over (data, model)."""
+    ba = batch_axes(mesh)
+    ba_size = axes_size(mesh, ba)
+    model = mesh.shape.get("model", 1)
+    seq_axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    if "pod" in mesh.axis_names:
+        seq_axes = ("pod",) + seq_axes
+    seq_size = axes_size(mesh, seq_axes)
+
+    def assign(path, leaf):
+        shp = leaf.shape
+        names = [getattr(p, "name", getattr(p, "key", "")) for p in path]
+        field = names[-1] if names else ""
+        if len(shp) == 0:
+            return NamedSharding(mesh, P())
+        spec: list = [None] * len(shp)
+        batch_ok = shp[0] % ba_size == 0 and shp[0] >= ba_size
+        if field in ("k", "v"):          # (B, Hkv, S, D)
+            if batch_ok:
+                spec[0] = _spec_tuple(ba)
+                if shp[1] % model == 0:
+                    spec[1] = "model"
+                elif shp[2] % model == 0 and shp[2] >= 4096:
+                    spec[2] = "model"    # seq-sharded KV
+            elif shp[2] % seq_size == 0:
+                spec[2] = _spec_tuple(seq_axes)
+        elif field == "ckv":             # (B, S, R)
+            if batch_ok:
+                spec[0] = _spec_tuple(ba)
+                if shp[1] % model == 0 and shp[1] >= 4096:
+                    spec[1] = "model"
+            elif shp[1] % seq_size == 0:
+                spec[1] = _spec_tuple(seq_axes)
+        elif field == "kr":              # (B, 1, S, rope)
+            if batch_ok:
+                spec[0] = _spec_tuple(ba)
+            elif shp[2] % seq_size == 0:
+                spec[2] = _spec_tuple(seq_axes)
+        elif field == "h":               # mamba state (B, H, P, N)
+            if batch_ok:
+                spec[0] = _spec_tuple(ba)
+            if shp[1] % model == 0:
+                spec[1] = "model"
+        elif field == "conv_tail":       # (B, W-1, C)
+            if batch_ok:
+                spec[0] = _spec_tuple(ba)
+        # positions/length: replicated
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(assign, caches_spec)
+
+
+# Logical-axis rules for repro.distributed.constrain, per workload kind.
+TRAIN_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": ("model",),      # Megatron-SP-style residual sharding
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "expert": ("model",),
+    "vocab": ("model",),
+    "embed": None,
+    "fsdp": ("pod", "data"),
+}
+
+PREFILL_RULES = dict(TRAIN_RULES)
+
+DECODE_RULES = dict(TRAIN_RULES, seq=None)

@@ -1,0 +1,205 @@
+"""Workload builders: (jit-able fn, abstract args, in_shardings) per
+(architecture × input shape × mesh) — consumed by dryrun.py and the
+real launchers.
+
+  train_4k     → RouterTrainer.step_impl (the paper's training recipe:
+                 frozen backbone, router + λ updates, soft routing).
+  prefill_32k  → MD.prefill with live hard routing (lax.cond per layer).
+  decode_*     → MD.decode_step under a representative static routing
+                 pattern (Ω_MSR = 0.5 interleave over routed layers —
+                 §3.3: the pattern is fixed after prefill).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import policies
+from repro.launch import shardings as SH
+from repro.models import model as MD
+from repro.serve import kv_cache as KC
+from repro.train.train_loop import RouterTrainer
+
+
+@dataclass
+class Workload:
+    name: str
+    fn: Callable                       # positional-args callable
+    args: Tuple[Any, ...]              # ShapeDtypeStructs / abstract
+    in_shardings: Tuple[Any, ...]
+    rules: Dict                        # logical rules for `constrain`
+    model_flops: Optional[float] = None
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: MD.init_params(k, cfg),
+                          jax.random.key(0))
+
+
+def _extra_inputs(cfg: ModelConfig, B: int):
+    extra = {}
+    if cfg.family == "vlm":
+        extra["prefix_embeddings"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_prefix_tokens, cfg.d_model), cfg.dtype)
+    if cfg.family == "audio":
+        extra["encoder_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_ctx, cfg.d_model), cfg.dtype)
+    return extra
+
+
+def representative_pattern(cfg: ModelConfig, msr: float = 0.5):
+    """Static Ω=0.5 interleave routing over routed layers."""
+    arr = policies.static_pattern(cfg, msr, "interleave")
+    return tuple(
+        ("fa" if arr[i] else "sa") if kind == "attn" else None
+        for i, kind in enumerate(cfg.layer_kinds))
+
+
+def model_flops_estimate(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode D=B·1."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens  # forward only
+    return 2.0 * n * shape.global_batch  # one token per sequence
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+def build_train(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                seq_shard: bool = True) -> Workload:
+    B, S = shape.global_batch, shape.seq_len
+    trainer = RouterTrainer(cfg, total_steps=300)
+    params = abstract_params(cfg)
+    state = jax.eval_shape(lambda p: trainer.init(p), params)
+    i32, f32 = jnp.int32, jnp.float32
+    extra = _extra_inputs(cfg, B)
+
+    def fn(state, tokens, labels, loss_mask, task_type, rng, *extra_args):
+        kw = dict(zip(sorted(extra), extra_args))
+        return trainer.step_impl(state, tokens, labels, loss_mask,
+                                 task_type, rng, **kw)
+
+    rngspec = jax.eval_shape(lambda: jax.random.key(0))
+    args = (state,
+            jax.ShapeDtypeStruct((B, S), i32),
+            jax.ShapeDtypeStruct((B, S), i32),
+            jax.ShapeDtypeStruct((B, S), f32),
+            jax.ShapeDtypeStruct((B,), i32),
+            rngspec) + tuple(extra[k] for k in sorted(extra))
+
+    repl = SH.replicated(mesh)
+    state_sh = {
+        "trainable": SH.param_shardings(state["trainable"], mesh),
+        "frozen": SH.param_shardings(state["frozen"], mesh),
+        "lagrange": jax.tree.map(lambda _: repl, state["lagrange"]),
+        "opt_router": jax.tree.map(lambda _: repl, state["opt_router"]),
+        "opt_lagrange": jax.tree.map(lambda _: repl,
+                                     state["opt_lagrange"]),
+        "step": repl,
+    }
+    in_sh = (state_sh,
+             SH.batch_sharding(mesh, (B, S)),
+             SH.batch_sharding(mesh, (B, S)),
+             SH.batch_sharding(mesh, (B, S)),
+             SH.batch_sharding(mesh, (B,)),
+             repl) + tuple(
+        SH.batch_sharding(mesh, extra[k].shape) for k in sorted(extra))
+    rules = SH.TRAIN_RULES if seq_shard else dict(SH.TRAIN_RULES,
+                                                  seq=None)
+    tag = "" if seq_shard else "[no-seq-shard]"
+    return Workload(f"train{tag}", fn, args, in_sh, rules,
+                    model_flops_estimate(cfg, shape))
+
+
+def build_prefill(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                  routing_ctx: str = "hard") -> Workload:
+    B, S = shape.global_batch, shape.seq_len
+    params = abstract_params(cfg)
+    extra = _extra_inputs(cfg, B)
+    routable = bool(cfg.routable_layers()) and cfg.flux.enabled
+    ctx = routing_ctx if routable else "fa_only"
+
+    def fn(params, tokens, *extra_args):
+        kw = dict(zip(sorted(extra), extra_args))
+        return MD.prefill(params, cfg, tokens, routing_ctx=ctx,
+                          want_cache=True, **kw)
+
+    args = (params, jax.ShapeDtypeStruct((B, S), jnp.int32)) + tuple(
+        extra[k] for k in sorted(extra))
+    in_sh = (SH.param_shardings(params, mesh),
+             SH.batch_sharding(mesh, (B, S))) + tuple(
+        SH.batch_sharding(mesh, extra[k].shape) for k in sorted(extra))
+    return Workload(f"prefill[{ctx}]", fn, args, in_sh, SH.PREFILL_RULES,
+                    model_flops_estimate(cfg, shape))
+
+
+def build_decode(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                 msr: float = 0.5, distributed_kv: bool = False,
+                 decode_tp: bool = False) -> Workload:
+    B, S = shape.global_batch, shape.seq_len
+    params = abstract_params(cfg)
+    routable = bool(cfg.routable_layers()) and cfg.flux.enabled
+    pattern = (representative_pattern(cfg, msr) if routable else tuple(
+        ("fa" if k == "attn" else None) for k in cfg.layer_kinds))
+    caches = jax.eval_shape(
+        lambda: KC.init_decode_caches(cfg, pattern, B, S))
+    extra = {}
+    if cfg.family == "audio":
+        extra["enc_out"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_ctx, cfg.d_model), cfg.dtype)
+
+    dd = di = None
+    if distributed_kv:
+        from repro.distributed.decode import (make_distributed_dot_decode,
+                                              make_distributed_insert)
+        seq_axes = tuple(a for a in ("pod", "data", "model")
+                         if a in mesh.axis_names)
+        dd = make_distributed_dot_decode(mesh, seq_axes)
+        di = make_distributed_insert(mesh, seq_axes)
+
+    def fn(params, token, caches, pos, *extra_args):
+        kw = dict(zip(sorted(extra), extra_args))
+        if dd is not None:
+            with MD.use_decode_attn(dd), MD.use_cache_insert(di):
+                return MD.decode_step(params, cfg, token, caches,
+                                      pattern, pos, **kw)
+        return MD.decode_step(params, cfg, token, caches, pattern, pos,
+                              **kw)
+
+    args = (params, jax.ShapeDtypeStruct((B, 1), jnp.int32), caches,
+            jax.ShapeDtypeStruct((), jnp.int32)) + tuple(
+        extra[k] for k in sorted(extra))
+    psh = (SH.param_shardings_decode_tp(params, mesh) if decode_tp
+           else SH.param_shardings(params, mesh))
+    in_sh = (psh,
+             SH.batch_sharding(mesh, (B, 1)),
+             SH.cache_shardings(caches, mesh, B),
+             SH.replicated(mesh)) + tuple(
+        SH.batch_sharding(mesh, extra[k].shape) for k in sorted(extra))
+    tag = ("+distkv" if distributed_kv else "") + \
+        ("+tp" if decode_tp else "")
+    return Workload(f"decode[msr={msr}]{tag}", fn, args, in_sh,
+                    SH.DECODE_RULES, model_flops_estimate(cfg, shape))
+
+
+def build_workload(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                   **kw) -> Workload:
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, **kw)
+    return build_decode(cfg, shape, mesh, **kw)

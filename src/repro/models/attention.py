@@ -1,0 +1,168 @@
+"""Attention layers: GQA (dense archs) and MLA (DeepSeek-V2).
+
+Each layer exposes three stages so the Flux wrapper can compute Q/K/V
+once and run both the FA and SA modes over them during soft routing:
+
+    *_qkv    — projections (+RoPE); also returns the flat query tensor
+               x_Q fed to the Layer Router (paper §3.1).
+    attention modes run via ``repro.core.modes``.
+    *_out    — output projection.
+
+MLA additionally returns the compressed KV latent (+ shared roped key)
+— that is what the serving layer caches (DESIGN.md: the SA ring cache
+stores the 512-d latent, making sparse layers even cheaper).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import constrain
+from repro.models.layers import apply_rope, dense_init, rms_norm, rms_norm_init
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, dt = cfg.d_model, cfg.param_dtype
+    return {
+        "wq": dense_init(k1, d, cfg.q_dim, dt),
+        "wk": dense_init(k2, d, cfg.kv_dim, dt),
+        "wv": dense_init(k3, d, cfg.kv_dim, dt),
+        "wo": dense_init(k4, cfg.q_dim, d, dt),
+    }
+
+
+def gqa_qkv(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+            ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """x (B,S,d) → q (B,H,S,hd), k/v (B,Hkv,S,hd), x_Q (B,S,q_dim)."""
+    B, S, _ = x.shape
+    x_q = x @ params["wq"]
+    q = x_q.reshape(B, S, cfg.num_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    k = (x @ params["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim
+                                   ).transpose(0, 2, 1, 3)
+    v = (x @ params["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim
+                                   ).transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "heads", None, None)
+    k = constrain(k, "batch", "kv_heads", None, None)
+    v = constrain(v, "batch", "kv_heads", None, None)
+    return q, k, v, x_q
+
+
+def gqa_out(params, cfg: ModelConfig, attn: jax.Array) -> jax.Array:
+    """attn (B,H,S,hd) → (B,S,d)."""
+    B, H, S, hd = attn.shape
+    y = attn.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return constrain(y @ params["wo"], "batch", None, "embed")
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention, DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 6)
+    d, dt = cfg.d_model, cfg.param_dtype
+    qk_hd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "w_dq": dense_init(ks[0], d, cfg.q_lora_rank, dt),
+        "q_norm": rms_norm_init(cfg.q_lora_rank, dt),
+        "w_uq": dense_init(ks[1], cfg.q_lora_rank, cfg.num_heads * qk_hd, dt),
+        "w_dkv": dense_init(ks[2], d, cfg.kv_lora_rank, dt),
+        "kv_norm": rms_norm_init(cfg.kv_lora_rank, dt),
+        "w_kr": dense_init(ks[3], d, cfg.qk_rope_head_dim, dt),
+        "w_ukv": dense_init(
+            ks[4], cfg.kv_lora_rank,
+            cfg.num_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim), dt),
+        "wo": dense_init(ks[5], cfg.num_heads * cfg.v_head_dim, d, dt),
+    }
+
+
+def mla_latent(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Compressed KV: latent (B,S,R) (normed) + shared roped key
+    (B,1,S,rope_dim).  This pair is what gets cached."""
+    ckv = rms_norm(params["kv_norm"], x @ params["w_dkv"], cfg.norm_eps)
+    k_rope = (x @ params["w_kr"])[:, None]  # single shared head
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return ckv, k_rope
+
+
+def mla_q(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+          ) -> Tuple[jax.Array, jax.Array]:
+    """q (B,H,S,nope+rope) and the router input x_Q (B,S,H·(nope+rope))."""
+    B, S, _ = x.shape
+    q_lat = rms_norm(params["q_norm"], x @ params["w_dq"], cfg.norm_eps)
+    x_q = q_lat @ params["w_uq"]
+    qk_hd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    q = x_q.reshape(B, S, cfg.num_heads, qk_hd).transpose(0, 2, 1, 3)
+    q_nope = q[..., :cfg.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_head_dim:], positions,
+                        cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return constrain(q, "batch", "heads", None, None), x_q
+
+
+def mla_expand_kv(params, cfg: ModelConfig, ckv: jax.Array,
+                  k_rope: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Decompress latent → per-head K (B,H,S,nope+rope), V (B,H,S,v)."""
+    B, S, _ = ckv.shape
+    H = cfg.num_heads
+    kv = (ckv @ params["w_ukv"]).reshape(
+        B, S, H, cfg.qk_nope_head_dim + cfg.v_head_dim).transpose(0, 2, 1, 3)
+    k_nope, v = (kv[..., :cfg.qk_nope_head_dim],
+                 kv[..., cfg.qk_nope_head_dim:])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, H, S, cfg.qk_rope_head_dim))],
+        axis=-1)
+    return (constrain(k, "batch", "heads", None, None),
+            constrain(v, "batch", "heads", None, None))
+
+
+def mla_out(params, cfg: ModelConfig, attn: jax.Array) -> jax.Array:
+    B, H, S, dv = attn.shape
+    y = attn.transpose(0, 2, 1, 3).reshape(B, S, H * dv)
+    return constrain(y @ params["wo"], "batch", None, "embed")
+
+
+def mla_absorbed_decode(params, cfg: ModelConfig, x: jax.Array,
+                        position: jax.Array, ckv_cache: jax.Array,
+                        kr_cache: jax.Array, valid: jax.Array) -> jax.Array:
+    """Weight-absorbed MLA decode (production path, DESIGN.md §2).
+
+    Scores are computed directly in latent space — W_uk is absorbed into
+    the query and W_uv into the output projection, so the per-step cost
+    is O(S·(R+rope)·H) instead of decompressing S latents per head.
+
+    x (B,1,d); ckv_cache (B,S,R); kr_cache (B,1,S,rope); valid (B,S) bool.
+    Returns (B,1,d).
+    """
+    B = x.shape[0]
+    H, R = cfg.num_heads, cfg.kv_lora_rank
+    nope, rope, dv = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                      cfg.v_head_dim)
+    q, _ = mla_q(params, cfg, x, position)  # (B,H,1,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    # Absorb W_uk: per head, w_uk (R, nope) ⇒ q_lat = q_nope @ w_uk^T (R,)
+    w_ukv = params["w_ukv"].reshape(R, H, nope + dv)
+    w_uk = w_ukv[:, :, :nope]   # (R,H,nope)
+    w_uv = w_ukv[:, :, nope:]   # (R,H,dv)
+    q_lat = jnp.einsum("bhqn,rhn->bhqr", q_nope, w_uk)  # (B,H,1,R)
+    scores = jnp.einsum("bhqr,bsr->bhqs", q_lat, ckv_cache,
+                        preferred_element_type=jnp.float32)
+    scores += jnp.einsum("bhqe,bzse->bhqs", q_rope, kr_cache,
+                         preferred_element_type=jnp.float32)
+    scores *= (nope + rope) ** -0.5
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bhqr", p.astype(ckv_cache.dtype), ckv_cache)
+    attn = jnp.einsum("bhqr,rhv->bhqv", ctx, w_uv)  # (B,H,1,dv)
+    return mla_out(params, cfg, attn)

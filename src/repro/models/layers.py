@@ -1,0 +1,87 @@
+"""Shared building blocks: RMSNorm, RoPE, SwiGLU, linear init."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rms_norm_init(dim: int, dtype) -> Dict[str, jax.Array]:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rms_norm(params: Dict[str, jax.Array], x: jax.Array,
+             eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (half-rotation / llama style)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate ``x`` (..., S, D) by position-dependent angles.
+
+    ``positions`` broadcasts against the S axis, e.g. shape (S,) or (B, S)
+    against (B, H, S, D).
+    """
+    d = x.shape[-1]
+    inv_freq = rope_frequencies(d, theta)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, d/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    # Broadcast (..., S, d/2) against x (..., H, S, d/2): add head axis if
+    # positions lacked it.
+    while sin.ndim < x.ndim:
+        sin = sin[..., None, :, :]
+        cos = cos[..., None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d_model: int, d_ff: int, dtype) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def ffn_apply(params: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    return h @ params["down"]

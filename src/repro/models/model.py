@@ -1,0 +1,673 @@
+"""Model assembly: init + three drivers (train / prefill / decode).
+
+Layer layout.  ``cfg.layer_pattern`` defines a period of block kinds
+(e.g. Jamba's 8-layer Mamba/attention interleave); the trunk params are
+stored *stacked by period position* — ``trunk[pos]`` is a pytree whose
+leaves carry a leading ``n_periods`` axis.  Train and prefill drivers
+``lax.scan`` over periods (compile time stays O(period), not O(L));
+decode unrolls a python loop over layers because the per-layer cache
+*shapes* depend on the (static) routing pattern — the paper's
+sparse-decode memory saving is structural (kv_cache.py).
+
+Flux routing contexts:
+  ("soft", tau, rng)   — Gumbel-Softmax blend of FA and SA (Eq. 5), train.
+  ("hard",)            — router argmax per layer (batch consensus) at
+                         prefill, executed via lax.cond (§3.3).
+  ("fixed", pattern)   — externally forced decisions (static baselines,
+                         dry-run patterns, ablations).
+  ("fa_only",)         — backbone as-is (flux disabled).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.tree_util import register_dataclass
+
+from repro.configs.base import ModelConfig
+from repro.core import modes as M
+from repro.core import router as R
+from repro.distributed import constrain
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as S
+from repro.models.layers import (dense_init, embed_init, ffn_apply, ffn_init,
+                                 rms_norm, rms_norm_init)
+from repro.serve import kv_cache as KC
+
+
+# ---------------------------------------------------------------------------
+# Structure helpers
+# ---------------------------------------------------------------------------
+
+def period_len(cfg: ModelConfig) -> int:
+    return len(cfg.layer_pattern)
+
+
+def n_periods(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % period_len(cfg) == 0, (
+        f"{cfg.name}: num_layers {cfg.num_layers} not divisible by "
+        f"pattern length {period_len(cfg)}")
+    return cfg.num_layers // period_len(cfg)
+
+
+def has_ffn(cfg: ModelConfig, layer_idx: int) -> bool:
+    return cfg.d_ff > 0 or cfg.moe_layer_mask()[layer_idx]
+
+
+def is_routed(cfg: ModelConfig, layer_idx: int) -> bool:
+    return (cfg.flux.enabled
+            and cfg.layer_kinds[layer_idx] == "attn")
+
+
+def router_in_dim(cfg: ModelConfig) -> int:
+    if cfg.use_mla:
+        return cfg.num_heads * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    return cfg.q_dim
+
+
+def sa_mode(cfg: ModelConfig) -> M.AttnMode:
+    return M.sa_mode_for(cfg.flux)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, layer_idx: int) -> Dict[str, Any]:
+    kind = cfg.layer_kinds[layer_idx]
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"norm1": rms_norm_init(cfg.d_model, cfg.param_dtype)}
+    if kind in ("attn", "local"):
+        p["attn"] = (A.mla_init(ks[0], cfg) if cfg.use_mla
+                     else A.gqa_init(ks[0], cfg))
+        if is_routed(cfg, layer_idx):
+            p["router"] = R.router_init(ks[1], router_in_dim(cfg), cfg.flux)
+        if cfg.num_encoder_layers:  # whisper decoder: cross attention
+            p["norm_x"] = rms_norm_init(cfg.d_model, cfg.param_dtype)
+            d = cfg.d_model
+            kx = jax.random.split(ks[2], 4)
+            p["xattn"] = {
+                "wq": dense_init(kx[0], d, cfg.q_dim, cfg.param_dtype),
+                "wk": dense_init(kx[1], d, cfg.q_dim, cfg.param_dtype),
+                "wv": dense_init(kx[2], d, cfg.q_dim, cfg.param_dtype),
+                "wo": dense_init(kx[3], cfg.q_dim, d, cfg.param_dtype),
+            }
+    elif kind == "mamba":
+        p["mamba"] = S.mamba_init(ks[0], cfg)
+    if has_ffn(cfg, layer_idx):
+        p["norm2"] = rms_norm_init(cfg.d_model, cfg.param_dtype)
+        if cfg.moe_layer_mask()[layer_idx]:
+            p["moe"] = MOE.moe_init(ks[3], cfg)
+        else:
+            p["ffn"] = ffn_init(ks[3], cfg.d_model, cfg.d_ff, cfg.param_dtype)
+    return p
+
+
+def _enc_block_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    kx = jax.random.split(ks[0], 4)
+    return {
+        "norm1": rms_norm_init(d, cfg.param_dtype),
+        "attn": {
+            "wq": dense_init(kx[0], d, cfg.q_dim, cfg.param_dtype),
+            "wk": dense_init(kx[1], d, cfg.q_dim, cfg.param_dtype),
+            "wv": dense_init(kx[2], d, cfg.q_dim, cfg.param_dtype),
+            "wo": dense_init(kx[3], cfg.q_dim, d, cfg.param_dtype),
+        },
+        "norm2": rms_norm_init(d, cfg.param_dtype),
+        "ffn": ffn_init(ks[1], d, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    P, NP = period_len(cfg), n_periods(cfg)
+    keys = jax.random.split(key, cfg.num_layers + cfg.num_encoder_layers + 2)
+    # trunk: for each period position, stack params over periods.
+    trunk = []
+    for pos in range(P):
+        per_period = [_block_init(keys[per * P + pos], cfg, per * P + pos)
+                      for per in range(NP)]
+        trunk.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_period))
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[-1], cfg.vocab_size, cfg.d_model,
+                            cfg.param_dtype),
+        "final_norm": rms_norm_init(cfg.d_model, cfg.param_dtype),
+        "trunk": tuple(trunk),
+    }
+    if not cfg.tie_embeddings:
+        params["out_w"] = dense_init(keys[-2], cfg.d_model, cfg.vocab_size,
+                                     cfg.param_dtype)
+    if cfg.num_encoder_layers:
+        enc = [_enc_block_init(keys[cfg.num_layers + i], cfg)
+               for i in range(cfg.num_encoder_layers)]
+        params["encoder"] = {
+            "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+            "final_norm": rms_norm_init(cfg.d_model, cfg.param_dtype),
+        }
+    return params
+
+
+def router_param_filter(params: Dict[str, Any]) -> Dict[str, Any]:
+    """Pytree mask: True on Layer-Router leaves (the only trainable part
+    when reproducing the paper's parameter-efficient training)."""
+    def mark(path, leaf):
+        return any(getattr(p, "key", None) == "router" for p in path)
+    return jax.tree_util.tree_map_with_path(mark, params)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _cross_attention(p, cfg: ModelConfig, h: jax.Array,
+                     enc_out: jax.Array) -> jax.Array:
+    """Whisper decoder cross-attention (bidirectional over encoder)."""
+    B, S, _ = h.shape
+    E = enc_out.shape[1]
+    q = (h @ p["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim
+                              ).transpose(0, 2, 1, 3)
+    k = (enc_out @ p["wk"]).reshape(B, E, cfg.num_heads, cfg.head_dim
+                                    ).transpose(0, 2, 1, 3)
+    v = (enc_out @ p["wv"]).reshape(B, E, cfg.num_heads, cfg.head_dim
+                                    ).transpose(0, 2, 1, 3)
+    o = M.attention(q, k, v, M.BIDIRECTIONAL)
+    return o.transpose(0, 2, 1, 3).reshape(B, S, -1) @ p["wo"]
+
+
+def _route_and_attend(bp, cfg: ModelConfig, q, k, v, x_q, ctx,
+                      q_offset=0):
+    """Run FA / SA / blend per the routing context.
+
+    Returns (attn_out, r) where r is:
+      soft  → r_soft (B,) FA probability
+      hard  → (decision scalar {0,1}, p_fa mean)
+      fixed → (decision, decision)
+      fa_only → None
+    """
+    flux = cfg.flux
+    sa = sa_mode(cfg)
+    kind = ctx[0]
+    if kind == "fa_only":
+        return M.attention(q, k, v, M.FULL, q_offset=q_offset,
+                           split_depth=cfg.causal_split_depth), None
+    if kind == "head_split":
+        # DuoAttention/PruLong-style static head-level baseline.
+        return M.head_split_attention(q, k, v, ctx[1], sa,
+                                      q_offset=q_offset), None
+    if kind == "soft":
+        _, tau, rng = ctx
+        r = R.soft_route(bp["router"], x_q, flux, tau, rng)  # (B,)
+        o_fa = M.attention(q, k, v, M.FULL, q_offset=q_offset,
+                           split_depth=cfg.causal_split_depth)
+        o_sa = M.attention(q, k, v, sa, q_offset=q_offset)
+        rb = r[:, None, None, None].astype(o_fa.dtype)
+        return rb * o_fa + (1 - rb) * o_sa, r
+    if kind == "hard":
+        r_hard, p_fa = R.hard_route(bp["router"], x_q, flux)
+        # batch-consensus scalar decision (per-request when B=1; the
+        # engine buckets requests by routing pattern otherwise)
+        decision = (jnp.mean(p_fa) > 0.5).astype(jnp.int32)
+    else:  # fixed
+        decision = ctx[1]
+        p_fa = None
+    out = lax.cond(
+        decision > 0,
+        lambda qkv: M.attention(*qkv, M.FULL, q_offset=q_offset,
+                                split_depth=cfg.causal_split_depth),
+        lambda qkv: M.attention(*qkv, sa, q_offset=q_offset),
+        (q, k, v))
+    p_mean = jnp.mean(p_fa) if p_fa is not None else decision.astype(
+        jnp.float32) if hasattr(decision, "astype") else jnp.float32(decision)
+    return out, (decision, p_mean)
+
+
+def block_apply(bp, cfg: ModelConfig, layer_idx: int, h: jax.Array,
+                positions: jax.Array, ctx, enc_out=None,
+                mamba_state=None, want_cache: bool = False):
+    """One transformer block (train/prefill path over a full sequence).
+
+    Returns (h, r, cache, aux): r is the routing record for routed
+    layers else None; cache is the layer's prefill KV when
+    ``want_cache`` (k/v | (ckv, kr) | (ssd_state, conv_tail)).
+    """
+    kind = cfg.layer_kinds[layer_idx]
+    cache = None
+    aux: Dict[str, Any] = {}
+    r = None
+    x = rms_norm(bp["norm1"], h, cfg.norm_eps)
+    if kind == "mamba":
+        y, (ssd_state, conv_tail) = S.mamba_apply(bp["mamba"], cfg, x,
+                                                  mamba_state)
+        if want_cache:
+            cache = (ssd_state, conv_tail)
+        h = h + y
+    elif kind in ("attn", "local"):
+        if cfg.use_mla:
+            ckv, kr = A.mla_latent(bp["attn"], cfg, x, positions)
+            q, x_q = A.mla_q(bp["attn"], cfg, x, positions)
+            k, v = A.mla_expand_kv(bp["attn"], cfg, ckv, kr)
+            if want_cache:
+                cache = (ckv, kr)
+        else:
+            q, k, v, x_q = A.gqa_qkv(bp["attn"], cfg, x, positions)
+            if want_cache:
+                cache = (k, v)
+        if kind == "local":
+            o = M.attention(q, k, v, M.window_mode(cfg.sliding_window))
+        elif is_routed(cfg, layer_idx) and ctx[0] != "fa_only":
+            o, r = _route_and_attend(bp, cfg, q, k, v, x_q, ctx)
+        else:
+            o = M.attention(q, k, v, M.FULL,
+                            split_depth=cfg.causal_split_depth)
+        h = h + (A.mla_out(bp["attn"], cfg, o) if cfg.use_mla
+                 else A.gqa_out(bp["attn"], cfg, o))
+        if "xattn" in bp and enc_out is not None:
+            hx = rms_norm(bp["norm_x"], h, cfg.norm_eps)
+            h = h + _cross_attention(bp["xattn"], cfg, hx, enc_out)
+    if has_ffn(cfg, layer_idx):
+        x2 = rms_norm(bp["norm2"], h, cfg.norm_eps)
+        if "moe" in bp:
+            y2, moe_aux = MOE.moe_apply(bp["moe"], cfg, x2)
+            aux["moe_balance"] = moe_aux["balance_loss"]
+            aux["moe_drop"] = moe_aux["drop_fraction"]
+        else:
+            y2 = ffn_apply(bp["ffn"], x2)
+        h = h + y2
+    return h, r, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper backbone)
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Bidirectional encoder over precomputed frame embeddings."""
+    enc = params["encoder"]
+
+    def body(h, bp):
+        x = rms_norm(bp["norm1"], h, cfg.norm_eps)
+        B, E, _ = x.shape
+        q = (x @ bp["attn"]["wq"]).reshape(B, E, cfg.num_heads, cfg.head_dim
+                                           ).transpose(0, 2, 1, 3)
+        k = (x @ bp["attn"]["wk"]).reshape(B, E, cfg.num_heads, cfg.head_dim
+                                           ).transpose(0, 2, 1, 3)
+        v = (x @ bp["attn"]["wv"]).reshape(B, E, cfg.num_heads, cfg.head_dim
+                                           ).transpose(0, 2, 1, 3)
+        o = M.attention(q, k, v, M.BIDIRECTIONAL)
+        h = h + o.transpose(0, 2, 1, 3).reshape(B, E, -1) @ bp["attn"]["wo"]
+        x2 = rms_norm(bp["norm2"], h, cfg.norm_eps)
+        return h + ffn_apply(bp["ffn"], x2), None
+
+    h, _ = lax.scan(body, frames.astype(cfg.dtype), enc["layers"])
+    return rms_norm(enc["final_norm"], h, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jax.Array,
+                 prefix_embeddings=None) -> jax.Array:
+    h = params["embed"].astype(cfg.dtype)[tokens]
+    if prefix_embeddings is not None:
+        h = jnp.concatenate([prefix_embeddings.astype(cfg.dtype), h], axis=1)
+    return constrain(h, "batch", "seq", "embed")
+
+
+def unembed_matrix(params, cfg: ModelConfig) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["out_w"]
+
+
+def logits_from_hidden(params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    h = rms_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = h @ unembed_matrix(params, cfg).astype(h.dtype)
+    return constrain(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill drivers (scan over periods)
+# ---------------------------------------------------------------------------
+
+@register_dataclass
+@dataclass
+class ForwardOut:
+    logits: jax.Array           # (B, S, V) train / (B, V) prefill-last
+    r_soft: Optional[jax.Array]   # (B, n_routed) FA probs (train)
+    routing: Optional[jax.Array]  # (n_routed,) hard decisions (prefill)
+    p_fa: Optional[jax.Array]     # (n_routed,) mean FA prob (prefill)
+    aux: Dict[str, jax.Array]
+    caches: Any = None
+
+
+def _trunk_scan(params, cfg: ModelConfig, h: jax.Array, positions,
+                ctx_builder, enc_out=None, want_cache: bool = False,
+                remat: bool = False):
+    """Scan over periods; python loop over the period positions inside."""
+    P = period_len(cfg)
+
+    def body(carry, xs):
+        h = carry
+        per_idx, trunk_slice = xs
+        rs, caches, auxes = [], [], {}
+        for pos in range(P):
+            layer_idx_static = pos  # static within period
+            ctx = ctx_builder(per_idx, pos)
+            h, r, cache, aux = block_apply(
+                trunk_slice[pos], cfg, layer_idx_static, h, positions, ctx,
+                enc_out=enc_out, want_cache=want_cache)
+            if r is not None:
+                rs.append(r)
+            if cache is not None:
+                caches.append(cache)
+            for k_, v_ in aux.items():
+                auxes[k_] = auxes.get(k_, 0.0) + v_
+        # keep the carried residual stream sharded (the scan's saved
+        # activations dominate training memory at 100B scale; "seq" maps
+        # to the model axis under the launch layer's Megatron-SP-style
+        # rules)
+        h = constrain(h, "batch", "seq", "embed")
+        return h, (tuple(rs), tuple(caches), auxes)
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = (jnp.arange(n_periods(cfg)), params["trunk"])
+    h, (rs, caches, auxes) = lax.scan(body, h, xs)
+    return h, rs, caches, auxes
+
+
+def forward_train(params, cfg: ModelConfig, tokens: jax.Array, *,
+                  rng=None, tau=1.0, prefix_embeddings=None,
+                  encoder_frames=None, remat: bool = True,
+                  flux_soft: bool = True,
+                  output_hidden: bool = False) -> ForwardOut:
+    """Training forward with Gumbel-Softmax soft routing (Eq. 4–5).
+
+    ``output_hidden=True`` returns the final-normed hidden states in
+    ``.logits`` instead of vocabulary logits — callers then use
+    ``chunked_cross_entropy`` so the (B,S,V) tensor is never
+    materialized (essential at 256k vocab)."""
+    B, Stok = tokens.shape
+    enc_out = (encode(params, cfg, encoder_frames)
+               if cfg.num_encoder_layers else None)
+    h = embed_tokens(params, cfg, tokens, prefix_embeddings)
+    positions = jnp.arange(h.shape[1])
+    P = period_len(cfg)
+
+    use_soft = flux_soft and cfg.flux.enabled and rng is not None
+
+    def ctx_builder(per_idx, pos):
+        if not use_soft or cfg.layer_kinds[pos] != "attn":
+            return ("fa_only",)
+        layer_rng = jax.random.fold_in(jax.random.fold_in(rng, pos), per_idx)
+        return ("soft", tau, layer_rng)
+
+    h, rs, _, auxes = _trunk_scan(params, cfg, h, positions, ctx_builder,
+                                  enc_out=enc_out, remat=remat)
+    prefix = h.shape[1] - Stok
+    h = h[:, prefix:] if prefix else h
+    if output_hidden:
+        logits = rms_norm(params["final_norm"], h, cfg.norm_eps)
+    else:
+        logits = logits_from_hidden(params, cfg, h)
+    r_soft = None
+    if use_soft and rs:
+        # rs: tuple over routed positions of (n_periods, B) → (B, n_routed)
+        stacked = jnp.stack(rs, axis=1)  # (n_periods, n_pos_routed, B)
+        r_soft = jnp.transpose(stacked, (2, 0, 1)).reshape(B, -1)
+    return ForwardOut(logits=logits, r_soft=r_soft, routing=None, p_fa=None,
+                      aux=auxes)
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array, *,
+            routing_ctx: str = "hard", fixed_pattern=None,
+            head_split_n: int = 0, prefix_embeddings=None,
+            encoder_frames=None, want_cache: bool = True) -> ForwardOut:
+    """Serving prefill: hard routing (or a fixed pattern), full KV out.
+
+    ``fixed_pattern``: (num_layers,) int array (1=FA, 0=SA) or None.
+    ``routing_ctx="head_split"`` runs the DuoAttention-style baseline
+    with ``head_split_n`` retrieval KV heads per layer.
+    """
+    B, Stok = tokens.shape
+    enc_out = (encode(params, cfg, encoder_frames)
+               if cfg.num_encoder_layers else None)
+    h = embed_tokens(params, cfg, tokens, prefix_embeddings)
+    positions = jnp.arange(h.shape[1])
+    P = period_len(cfg)
+    if fixed_pattern is not None:
+        fixed_pattern = jnp.asarray(fixed_pattern).reshape(n_periods(cfg), P)
+
+    def ctx_builder(per_idx, pos):
+        if cfg.layer_kinds[pos] != "attn":
+            return ("fa_only",)
+        if routing_ctx == "head_split":
+            return ("head_split", head_split_n)
+        if not cfg.flux.enabled or routing_ctx == "fa_only":
+            return ("fa_only",)
+        if routing_ctx == "fixed":
+            return ("fixed", fixed_pattern[per_idx, pos])
+        return ("hard",)
+
+    h, rs, caches, auxes = _trunk_scan(params, cfg, h, positions,
+                                       ctx_builder, enc_out=enc_out,
+                                       want_cache=want_cache)
+    logits = logits_from_hidden(params, cfg, h[:, -1])
+    routing = p_fa = None
+    if rs:
+        # rs: tuple over routed positions of tuples (decision (n_periods,),
+        # p_mean (n_periods,)) — stack to (n_routed,) in layer order.
+        dec = jnp.stack([r[0] for r in rs], axis=1)   # (n_periods, n_pos)
+        pfa = jnp.stack([r[1] for r in rs], axis=1)
+        routing = dec.reshape(-1)
+        p_fa = pfa.reshape(-1)
+    return ForwardOut(logits=logits, r_soft=None, routing=routing,
+                      p_fa=p_fa, aux=auxes, caches=caches if want_cache
+                      else None)
+
+
+# ---------------------------------------------------------------------------
+# Decode driver (python loop over layers; static routing pattern)
+# ---------------------------------------------------------------------------
+
+def layer_params(params, cfg: ModelConfig, layer_idx: int):
+    P = period_len(cfg)
+    per, pos = divmod(layer_idx, P)
+    return jax.tree.map(lambda a: a[per], params["trunk"][pos])
+
+
+def _decode_attn_full(bp, cfg, x, pos, cache: KC.FullKV):
+    positions = pos[None]
+    if cfg.use_mla:
+        ckv, kr = A.mla_latent(bp["attn"], cfg, x, positions)
+        cache = KC.latent_insert(cache, ckv, kr, pos)
+        valid = jnp.arange(cache.ckv.shape[1]) <= pos
+        y = A.mla_absorbed_decode(bp["attn"], cfg, x, positions,
+                                  cache.ckv, cache.kr, valid[None].repeat(
+                                      x.shape[0], 0))
+        return y, cache
+    q, k, v, _ = A.gqa_qkv(bp["attn"], cfg, x, positions)
+    cache = _full_kv_insert(cache, k, v, pos)
+    valid = jnp.arange(cache.k.shape[2]) <= pos  # (Smax,)
+    o = _dot_decode(q, cache.k, cache.v, valid)
+    return A.gqa_out(bp["attn"], cfg, o), cache
+
+
+def _decode_attn_ring(bp, cfg, x, pos, cache, sink: int, local: int):
+    positions = pos[None]
+    if cfg.use_mla:
+        ckv, kr = A.mla_latent(bp["attn"], cfg, x, positions)
+        cache = KC.ring_latent_insert(cache, ckv, kr, pos, sink, local)
+        valid = (cache.positions >= 0) & (cache.positions <= pos)
+        y = A.mla_absorbed_decode(bp["attn"], cfg, x, positions, cache.ckv,
+                                  cache.kr,
+                                  valid[None].repeat(x.shape[0], 0))
+        return y, cache
+    q, k, v, _ = A.gqa_qkv(bp["attn"], cfg, x, positions)
+    cache = KC.ring_insert(cache, k, v, pos, sink, local)
+    valid = (cache.positions >= 0) & (cache.positions <= pos)
+    o = _dot_decode(q, cache.k, cache.v, valid)
+    return A.gqa_out(bp["attn"], cfg, o), cache
+
+
+import contextlib as _contextlib
+
+# Pluggable decode-attention implementation: the launch layer installs
+# the shard_map LSE-combine path for sequence-sharded caches
+# (repro.distributed.decode); default is the local dot product.
+_DECODE_ATTN_OVERRIDE = []
+_CACHE_INSERT_OVERRIDE = []
+
+
+@_contextlib.contextmanager
+def use_decode_attn(fn):
+    _DECODE_ATTN_OVERRIDE.append(fn)
+    try:
+        yield
+    finally:
+        _DECODE_ATTN_OVERRIDE.pop()
+
+
+@_contextlib.contextmanager
+def use_cache_insert(fn):
+    """Install a sharded FullKV insert (repro.distributed.decode)."""
+    _CACHE_INSERT_OVERRIDE.append(fn)
+    try:
+        yield
+    finally:
+        _CACHE_INSERT_OVERRIDE.pop()
+
+
+def _full_kv_insert(cache: KC.FullKV, k_new, v_new, pos) -> KC.FullKV:
+    if _CACHE_INSERT_OVERRIDE:
+        out = _CACHE_INSERT_OVERRIDE[-1](cache.k, cache.v, k_new, v_new,
+                                         pos)
+        if out is not None:
+            return KC.FullKV(k=out[0], v=out[1], length=pos + 1)
+    return KC.full_insert(cache, k_new, v_new, pos)
+
+
+def _dot_decode(q, k, v, valid):
+    """q (B,H,1,D), k/v (B,Hkv,L,D), valid (L,) or (Hkv,L) → (B,H,1,D)."""
+    if _DECODE_ATTN_OVERRIDE and valid.ndim == 1:
+        out = _DECODE_ATTN_OVERRIDE[-1](q, k, v, valid)
+        if out is not None:  # override may decline (e.g. small ring)
+            return out
+    B, Hq, _, D = q.shape
+    Hkv = k.shape[1]
+    q5 = q.reshape(B, Hkv, Hq // Hkv, 1, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q5, k,
+                   preferred_element_type=jnp.float32) * D ** -0.5
+    if valid.ndim == 1:
+        vmask = valid[None, None, None, None, :]
+    else:  # per-kv-head mask (head-split baselines)
+        vmask = valid[None, :, None, None, :]
+    s = jnp.where(vmask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+def _decode_attn_headsplit(bp, cfg, x, pos, cache: KC.FullKV, n_fa_kv: int):
+    """DuoAttention-style decode: the cache stays *full-shape* (ragged
+    per-head histories are unrepresentable — the paper's §2.3 point);
+    streaming heads merely mask, saving FLOPs but no HBM traffic."""
+    positions = pos[None]
+    q, k, v, _ = A.gqa_qkv(bp["attn"], cfg, x, positions)
+    cache = KC.full_insert(cache, k, v, pos)
+    L = cache.k.shape[2]
+    idx = jnp.arange(L)
+    full_valid = idx <= pos
+    stream_valid = full_valid & ((idx < cfg.flux.sink)
+                                 | (pos - idx < cfg.flux.local))
+    per_head = jnp.where(
+        (jnp.arange(cfg.num_kv_heads) < n_fa_kv)[:, None],
+        full_valid[None, :], stream_valid[None, :])
+    o = _dot_decode(q, cache.k, cache.v, per_head)
+    return A.gqa_out(bp["attn"], cfg, o), cache
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, caches: List,
+                routing: Tuple[str, ...], pos: jax.Array, enc_out=None):
+    """One autoregressive step.
+
+    token (B,1) int32; ``routing`` is the *static* per-layer pattern
+    ("fa" | "sa" | None) cached from prefill (§3.3 — router runs once).
+    Returns (logits (B,V), new_caches).
+    """
+    h = embed_tokens(params, cfg, token)
+    new_caches = []
+    flux = cfg.flux
+    for i, kind in enumerate(cfg.layer_kinds):
+        bp = layer_params(params, cfg, i)
+        cache = caches[i]
+        x = rms_norm(bp["norm1"], h, cfg.norm_eps)
+        if kind == "mamba":
+            y, hstate, tail = S.mamba_decode_step(bp["mamba"], cfg, x,
+                                                  cache.h, cache.conv_tail)
+            cache = KC.MambaCache(h=hstate, conv_tail=tail)
+            h = h + y
+        else:
+            if kind == "local":
+                y, cache = _decode_attn_ring(
+                    bp, cfg, x, pos, cache, 0, cache.k.shape[2])
+            elif isinstance(routing[i], tuple) and routing[i][0] == "duo":
+                y, cache = _decode_attn_headsplit(bp, cfg, x, pos, cache,
+                                                  routing[i][1])
+            elif routing[i] == "sa":
+                ring_local = (cache.ckv.shape[1] if cfg.use_mla
+                              else cache.k.shape[2]) - flux.sink
+                y, cache = _decode_attn_ring(bp, cfg, x, pos, cache,
+                                             flux.sink, ring_local)
+            else:
+                y, cache = _decode_attn_full(bp, cfg, x, pos, cache)
+            h = h + y
+            if "xattn" in bp and enc_out is not None:
+                hx = rms_norm(bp["norm_x"], h, cfg.norm_eps)
+                h = h + _cross_attention(bp["xattn"], cfg, hx, enc_out)
+        if has_ffn(cfg, i):
+            x2 = rms_norm(bp["norm2"], h, cfg.norm_eps)
+            if "moe" in bp:
+                y2, _ = MOE.moe_apply(bp["moe"], cfg, x2)
+            else:
+                y2 = ffn_apply(bp["ffn"], x2)
+            h = h + y2
+        new_caches.append(cache)
+    logits = logits_from_hidden(params, cfg, h[:, -1])
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
+
+def capture_hidden(params, cfg: ModelConfig, tokens: jax.Array,
+                   prefix_embeddings=None, encoder_frames=None) -> jax.Array:
+    """Hidden states after every layer (L, B, S_total, d) — used by the
+    UnComp entropy ranking (paper App. C) and analysis benches."""
+    enc_out = (encode(params, cfg, encoder_frames)
+               if cfg.num_encoder_layers else None)
+    h = embed_tokens(params, cfg, tokens, prefix_embeddings)
+    positions = jnp.arange(h.shape[1])
+    P = period_len(cfg)
+
+    def body(carry, xs):
+        h = carry
+        _, trunk_slice = xs
+        snaps = []
+        for pos in range(P):
+            h, _, _, _ = block_apply(trunk_slice[pos], cfg, pos, h,
+                                     positions, ("fa_only",),
+                                     enc_out=enc_out)
+            snaps.append(h)
+        return h, jnp.stack(snaps)
+
+    xs = (jnp.arange(n_periods(cfg)), params["trunk"])
+    _, snaps = lax.scan(body, h, xs)  # (n_periods, P, B, S, d)
+    return snaps.reshape(cfg.num_layers, *snaps.shape[2:])

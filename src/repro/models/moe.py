@@ -1,0 +1,131 @@
+"""Mixture-of-Experts FFN with capacity-bounded scatter dispatch.
+
+Production formulation (MaxText/Megablocks-style "dropping" path):
+tokens pick top-k experts; each expert has a static capacity
+C = ceil(T·k/E · capacity_factor); tokens are scattered into an
+(E, C, D) buffer, expert FFNs run as one batched einsum with the expert
+dim sharded over the ``model`` mesh axis (expert parallelism) when
+E % model_size == 0, and gathered back weighted by the (renormalized)
+router probabilities.  Overflow tokens are dropped (residual connection
+carries them), underflow slots are zero — standard capacity semantics.
+
+Shared experts (DeepSeek-V2) are plain dense SwiGLUs applied to every
+token and added to the routed output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import constrain
+from repro.models.layers import dense_init, ffn_apply, ffn_init
+
+
+def moe_init(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    kg, ke, ks = jax.random.split(key, 3)
+    d, dt, E, f = cfg.d_model, cfg.param_dtype, cfg.num_experts, cfg.moe_d_ff
+    keys = jax.random.split(ke, 3)
+    params = {
+        "gate_w": dense_init(kg, d, E, jnp.float32),
+        "experts": {
+            "gate": jax.vmap(lambda k: dense_init(k, d, f, dt))(
+                jax.random.split(keys[0], E)),
+            "up": jax.vmap(lambda k: dense_init(k, d, f, dt))(
+                jax.random.split(keys[1], E)),
+            "down": jax.vmap(lambda k: dense_init(k, f, d, dt))(
+                jax.random.split(keys[2], E)),
+        },
+    }
+    if cfg.num_shared_experts:
+        params["shared"] = ffn_init(
+            ks, d, cfg.moe_d_ff * cfg.num_shared_experts, cfg.param_dtype)
+    return params
+
+
+def moe_apply(params, cfg: ModelConfig, x: jax.Array,
+              capacity_factor: Optional[float] = None
+              ) -> Tuple[jax.Array, Dict]:
+    """x (B,S,D) → (y (B,S,D), aux diagnostics).
+
+    GROUPED dispatch (MaxText-style): capacity and scatter positions are
+    computed per batch row, so every tensor keeps a leading batch dim
+    that shards over ("pod","data") and dispatch never crosses data
+    shards.  (A global-cumsum dispatch makes the slot position of every
+    token depend on every other shard's counts — observed as three
+    64 GB expert-buffer all-gathers per MoE layer on the 256-chip mesh;
+    EXPERIMENTS.md §Perf iteration 4.)
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+
+    # Dispatch must be row-local: under Megatron-SP rules the residual
+    # stream is *sequence*-sharded, and a cumsum along a sharded dim
+    # forces SPMD to gather every (B, S·K, D) dispatch tensor
+    # (≈0.5 TB/step for deepseek-v2 — EXPERIMENTS.md §Perf it. 4b).
+    # Un-shard the seq dim here; batch stays sharded.
+    x = constrain(x, "batch", None, None)
+
+    logits = (x.astype(jnp.float32) @ params["gate_w"])  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, K)  # (B,S,K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    cap = (capacity_factor if capacity_factor is not None
+           else cfg.moe_capacity_factor)
+    # Per-row capacity; max per-expert load within a row is S (top-k
+    # experts are distinct per token), so C == S is dropless.
+    C = min(max(1, int(-(-S * K // E) * cap)), S)
+
+    # slot position within (row, expert): one-hot cumsum along the
+    # row-local flattened (S·K) order — token-priority, shard-local.
+    oh = jax.nn.one_hot(top_i.reshape(B, S * K), E,
+                        dtype=jnp.int32)  # (B, S*K, E)
+    pos_all = jnp.cumsum(oh, axis=1) - oh
+    e_flat = top_i.reshape(B, S * K)
+    pos = jnp.take_along_axis(pos_all, e_flat[..., None],
+                              axis=2)[..., 0]  # (B, S*K)
+    keep = pos < C
+    w_flat = jnp.where(keep, top_p.reshape(B, S * K), 0.0)
+
+    # Scatter tokens into (B, E, C, D) — batched over rows.
+    src = jnp.repeat(x, K, axis=1)  # (B, S*K, D): slot s*K+j ← token s
+    expert_in = jnp.zeros((B, E, C, D), x.dtype)
+    b_idx = jnp.arange(B)[:, None]
+    expert_in = expert_in.at[
+        b_idx, e_flat, jnp.where(keep, pos, C - 1)].add(
+        src * keep[..., None].astype(x.dtype))
+    # E must stay UNsharded: the scatter/gather index it; tensor
+    # parallelism lives on the expert hidden dim instead (weights are
+    # f-sharded over "model", E replicated — see launch/shardings).
+    expert_in = constrain(expert_in, "batch", None, None, None)
+
+    ew = params["experts"]
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in, ew["gate"])
+                    ) * jnp.einsum("becd,edf->becf", expert_in, ew["up"])
+    h = constrain(h, "batch", None, None, "ffn")
+    expert_out = jnp.einsum("becf,efd->becd", h, ew["down"])
+    expert_out = constrain(expert_out, "batch", None, None, None)
+
+    # Gather back per row: slot reads expert_out[b, e, pos].
+    gathered = expert_out[b_idx, e_flat,
+                          jnp.where(keep, pos, 0)]  # (B, S*K, D)
+    y = (gathered * w_flat[..., None].astype(x.dtype)
+         ).reshape(B, S, K, D).sum(axis=2)
+
+    if "shared" in params:
+        y = y + ffn_apply(params["shared"], x)
+
+    load = oh.sum((0, 1))
+    frac_tokens = load.astype(jnp.float32) / jnp.maximum(load.sum(), 1)
+    mean_prob = probs.mean((0, 1))
+    aux = {
+        "load": load,                            # tokens per expert (pre-cap)
+        "drop_fraction": 1.0 - keep.mean(),
+        "router_entropy": -(probs * jnp.log(probs + 1e-9)).sum(-1).mean(),
+        # Switch-style load-balance loss (used when pretraining backbones).
+        "balance_loss": E * jnp.sum(frac_tokens * mean_prob),
+    }
+    return y, aux

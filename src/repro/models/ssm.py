@@ -1,0 +1,195 @@
+"""Mamba2 block via SSD (state-space duality), TPU-native chunked form.
+
+The SSD algorithm [arXiv:2405.21060] decomposes the selective-scan into
+(a) intra-chunk *matmul* blocks (MXU-friendly quadratic attention-like
+contractions over chunks of length Q) and (b) a cheap inter-chunk
+recurrence over per-chunk states — this is exactly the TPU adaptation
+the paper's GPU scan kernels need (DESIGN.md §2): the quadratic piece
+feeds the systolic array, the recurrence is a ``lax.scan`` over
+S/Q steps.
+
+All decay factors are exp of non-positive numbers (A < 0, dt > 0), so
+the chunked form is numerically safe in bf16; accumulations are f32.
+
+Decode is the O(1) recurrent step: h ← exp(dt·A)·h + dt·(B ⊗ x);
+y = C·h + D·x, plus a (width-1)-deep causal-conv tail buffer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm, rms_norm_init
+
+
+def mamba_init(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 4)
+    d, dt = cfg.d_model, cfg.param_dtype
+    inner, N, nh = cfg.ssm_inner, cfg.ssm_state_dim, cfg.ssm_num_heads
+    conv_ch = inner + 2 * N
+    return {
+        # in_proj → [z(inner), xBC(inner+2N), dt(nh)]
+        "in_proj": dense_init(ks[0], d, 2 * inner + 2 * N + nh, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": rms_norm_init(inner, dt),
+        "out_proj": dense_init(ks[3], inner, d, dt),
+    }
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B,S,C) with taps (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1]] * w[i] for i in range(W))
+    return out + b
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                h0: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """SSD over a sequence.
+
+    x (B,S,H,P); dt (B,S,H) (post-softplus); A (H,) (<0); Bm/Cm (B,S,N)
+    (shared across heads, ngroups=1).  Returns (y (B,S,H,P),
+    final_state (B,H,P,N)).
+    """
+    B, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    xc = x.reshape(B, nc, Q, H, Pd)
+    dtc = dt.reshape(B, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+
+    dA = dtc * A  # (B,nc,Q,H), ≤ 0
+    cum = jnp.cumsum(dA, axis=2)  # inclusive within chunk
+
+    # --- intra-chunk (quadratic, MXU) ---
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                    preferred_element_type=jnp.float32)  # (B,nc,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    ii, jj = jnp.arange(Q)[:, None], jnp.arange(Q)[None, :]
+    causal = (ii >= jj)[None, None, :, :, None]
+    scores = jnp.where(causal, CB[..., None] * decay, 0.0)  # (B,nc,Q,Q,H)
+    xbar = xc * dtc[..., None].astype(xc.dtype)  # dt enters as input scale
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores.astype(xc.dtype), xbar,
+                         preferred_element_type=jnp.float32)
+
+    # --- per-chunk states ---
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    S_c = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc,
+                     (decay_end * dtc).astype(xc.dtype), xc,
+                     preferred_element_type=jnp.float32)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    # --- inter-chunk recurrence ---
+    if h0 is None:
+        h0 = jnp.zeros((B, H, Pd, N), jnp.float32)
+
+    def step(h, inp):
+        dec, s_c = inp  # dec (B,H), s_c (B,H,P,N)
+        h_prev = h
+        h = h * dec[:, :, None, None] + s_c
+        return h, h_prev
+
+    dec_seq = jnp.moveaxis(chunk_decay, 1, 0)  # (nc,B,H)
+    s_seq = jnp.moveaxis(S_c, 1, 0)            # (nc,B,H,P,N)
+    h_final, h_prevs = lax.scan(step, h0, (dec_seq, s_seq))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc,
+                         h_prevs.astype(xc.dtype),
+                         jnp.exp(cum).astype(xc.dtype),
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(B, Sp, H, Pd)[:, :S]
+    return y.astype(x.dtype), h_final
+
+
+def _split_proj(params, cfg: ModelConfig, x: jax.Array):
+    inner, N, nh = cfg.ssm_inner, cfg.ssm_state_dim, cfg.ssm_num_heads
+    zxbcdt = x @ params["in_proj"]
+    z = zxbcdt[..., :inner]
+    xBC = zxbcdt[..., inner:2 * inner + 2 * N]
+    dt_raw = zxbcdt[..., 2 * inner + 2 * N:]
+    return z, xBC, dt_raw
+
+
+def mamba_apply(params, cfg: ModelConfig, x: jax.Array,
+                state=None) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence (train/prefill) Mamba2 block.
+
+    x (B,S,d) → (y (B,S,d), (ssd_state (B,H,P,N) f32, conv_tail
+    (B,W-1,C))).  ``state`` optionally carries (h0, conv_tail) for
+    chunked prefill.
+    """
+    B, S, _ = x.shape
+    inner, N, nh = cfg.ssm_inner, cfg.ssm_state_dim, cfg.ssm_num_heads
+    z, xBC, dt_raw = _split_proj(params, cfg, x)
+    if state is not None and state[1] is not None:
+        xBC_in = jnp.concatenate([state[1], xBC], axis=1)
+        conv_full = _causal_conv(xBC_in, params["conv_w"], params["conv_b"])
+        conv = conv_full[:, state[1].shape[1]:]
+    else:
+        conv = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    conv = jax.nn.silu(conv)
+    xs = conv[..., :inner].reshape(B, S, nh, cfg.ssm_head_dim)
+    Bm = conv[..., inner:inner + N]
+    Cm = conv[..., inner + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    h0 = state[0] if state is not None else None
+    y, h_final = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk, h0)
+    y = y + (params["D"].astype(y.dtype)[:, None] * xs)
+    y = y.reshape(B, S, inner)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    conv_tail = xBC[:, -(cfg.ssm_conv_width - 1):]
+    return y @ params["out_proj"], (h_final, conv_tail)
+
+
+def mamba_decode_step(params, cfg: ModelConfig, x: jax.Array,
+                      ssd_state: jax.Array, conv_tail: jax.Array):
+    """Single-token recurrent step.
+
+    x (B,1,d); ssd_state (B,H,P,N) f32; conv_tail (B,W-1,C).
+    Returns (y (B,1,d), new_ssd_state, new_conv_tail).
+    """
+    B = x.shape[0]
+    inner, N, nh = cfg.ssm_inner, cfg.ssm_state_dim, cfg.ssm_num_heads
+    z, xBC, dt_raw = _split_proj(params, cfg, x)
+    window = jnp.concatenate([conv_tail, xBC], axis=1)  # (B,W,C)
+    conv = jnp.einsum("bwc,wc->bc", window, params["conv_w"]
+                      ) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+    xs = conv[:, :inner].reshape(B, nh, cfg.ssm_head_dim)
+    Bm = conv[:, inner:inner + N]
+    Cm = conv[:, inner + N:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)  # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xs.astype(jnp.float32),
+                     Bm.astype(jnp.float32))
+    h = ssd_state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y + params["D"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, inner).astype(x.dtype)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    new_tail = jnp.concatenate([conv_tail[:, 1:], xBC], axis=1)
+    return y @ params["out_proj"], h, new_tail

@@ -1,0 +1,8 @@
+from repro.serve.engine import (  # noqa: F401
+    GenerationResult,
+    Request,
+    ServeEngine,
+    repack_caches,
+    serve_batch,
+)
+from repro.serve import kv_cache  # noqa: F401

@@ -1,0 +1,194 @@
+"""Decode-time KV caches.
+
+The paper's sparse-decode (§3.3) keeps, per layer, either the complete
+KV (retrieval/FA layers) or only the minimal sink+local buffer (SA
+layers).  On TPU this distinction must be *structural*: XLA needs
+static shapes, so the SA layers get a fixed-size ring buffer whose
+shape (sink+local) is independent of context length — the bandwidth
+and memory saving shows up in the compiled artifact, not in a runtime
+branch (DESIGN.md §2).
+
+All cache types are registered pytrees so they flow through jit.
+Keys are stored with RoPE already applied at absolute positions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import register_dataclass
+
+from repro.configs.base import FluxConfig, ModelConfig
+
+
+@register_dataclass
+@dataclass
+class FullKV:
+    """Complete KV history, appended at ``length``."""
+    k: jax.Array  # (B, Hkv, Smax, D)
+    v: jax.Array  # (B, Hkv, Smax, D)
+    length: jax.Array  # () int32 — tokens currently valid
+
+
+@register_dataclass
+@dataclass
+class RingKV:
+    """Sink + local ring buffer (StreamingLLM geometry).
+
+    Slots [0, sink) hold the attention-sink tokens; slots
+    [sink, sink+local) are a ring over the most recent ``local``
+    positions.  ``positions`` records each slot's absolute position
+    (-1 = empty); shared across the batch (uniform sequence lengths —
+    the engine buckets requests by length).
+    """
+    k: jax.Array  # (B, Hkv, sink+local, D)
+    v: jax.Array
+    positions: jax.Array  # (sink+local,) int32
+    length: jax.Array  # () int32 — absolute position of next token
+
+
+@register_dataclass
+@dataclass
+class LatentKV:
+    """MLA: compressed latent + shared roped key (full history)."""
+    ckv: jax.Array  # (B, Smax, R)
+    kr: jax.Array   # (B, 1, Smax, rope_dim)
+    length: jax.Array
+
+
+@register_dataclass
+@dataclass
+class RingLatentKV:
+    ckv: jax.Array  # (B, ring, R)
+    kr: jax.Array   # (B, 1, ring, rope_dim)
+    positions: jax.Array
+    length: jax.Array
+
+
+@register_dataclass
+@dataclass
+class CrossKV:
+    """Whisper decoder cross-attention KV (static, from the encoder)."""
+    k: jax.Array  # (B, Hkv, enc_ctx, D)
+    v: jax.Array
+
+
+@register_dataclass
+@dataclass
+class MambaCache:
+    h: jax.Array          # (B, H, P, N) f32 SSD state
+    conv_tail: jax.Array  # (B, W-1, conv_channels)
+
+
+def ring_slot(pos: jax.Array, sink: int, local: int) -> jax.Array:
+    """Absolute position → ring slot."""
+    return jnp.where(pos < sink, pos, sink + (pos - sink) % local)
+
+
+# The ring geometry (sink, local) is static config — threaded explicitly.
+
+def ring_insert(cache: RingKV, k_new: jax.Array, v_new: jax.Array,
+                pos: jax.Array, sink: int, local: int) -> RingKV:
+    slot = ring_slot(pos, sink, local)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=2)
+    positions = cache.positions.at[slot].set(pos)
+    return RingKV(k=k, v=v, positions=positions, length=pos + 1)
+
+
+def ring_latent_insert(cache: RingLatentKV, ckv_new: jax.Array,
+                       kr_new: jax.Array, pos: jax.Array, sink: int,
+                       local: int) -> RingLatentKV:
+    slot = ring_slot(pos, sink, local)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache.ckv, ckv_new, slot,
+                                              axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache.kr, kr_new, slot, axis=2)
+    positions = cache.positions.at[slot].set(pos)
+    return RingLatentKV(ckv=ckv, kr=kr, positions=positions, length=pos + 1)
+
+
+def full_insert(cache: FullKV, k_new: jax.Array, v_new: jax.Array,
+                pos: jax.Array) -> FullKV:
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, pos, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, pos, axis=2)
+    return FullKV(k=k, v=v, length=pos + 1)
+
+
+def latent_insert(cache: LatentKV, ckv_new: jax.Array, kr_new: jax.Array,
+                  pos: jax.Array) -> LatentKV:
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache.ckv, ckv_new, pos, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache.kr, kr_new, pos, axis=2)
+    return LatentKV(ckv=ckv, kr=kr, length=pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+
+def ring_size(flux: FluxConfig) -> int:
+    return flux.sink + flux.local
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, mode: str, batch: int,
+                     max_len: int, dtype=None):
+    """Fresh (empty) cache for one layer.
+
+    kind ∈ layer kinds; mode ∈ {"fa", "sa", "local", None}.
+    """
+    dtype = dtype or cfg.dtype
+    flux = cfg.flux
+    if kind == "mamba":
+        return MambaCache(
+            h=jnp.zeros((batch, cfg.ssm_num_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state_dim), jnp.float32),
+            conv_tail=jnp.zeros(
+                (batch, cfg.ssm_conv_width - 1,
+                 cfg.ssm_inner + 2 * cfg.ssm_state_dim), dtype))
+    if kind == "local":
+        L = min(cfg.sliding_window, max_len)
+        # pure ring (no sink): reuse RingKV with sink=0
+        return RingKV(
+            k=jnp.zeros((batch, cfg.num_kv_heads, L, cfg.head_dim), dtype),
+            v=jnp.zeros((batch, cfg.num_kv_heads, L, cfg.head_dim), dtype),
+            positions=jnp.full((L,), -1, jnp.int32),
+            length=jnp.zeros((), jnp.int32))
+    # attn layer
+    if cfg.use_mla:
+        if mode == "sa":
+            L = min(ring_size(flux), max_len)
+            return RingLatentKV(
+                ckv=jnp.zeros((batch, L, cfg.kv_lora_rank), dtype),
+                kr=jnp.zeros((batch, 1, L, cfg.qk_rope_head_dim), dtype),
+                positions=jnp.full((L,), -1, jnp.int32),
+                length=jnp.zeros((), jnp.int32))
+        return LatentKV(
+            ckv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            kr=jnp.zeros((batch, 1, max_len, cfg.qk_rope_head_dim), dtype),
+            length=jnp.zeros((), jnp.int32))
+    if mode == "sa":
+        L = min(ring_size(flux), max_len)
+        return RingKV(
+            k=jnp.zeros((batch, cfg.num_kv_heads, L, cfg.head_dim), dtype),
+            v=jnp.zeros((batch, cfg.num_kv_heads, L, cfg.head_dim), dtype),
+            positions=jnp.full((L,), -1, jnp.int32),
+            length=jnp.zeros((), jnp.int32))
+    return FullKV(
+        k=jnp.zeros((batch, cfg.num_kv_heads, max_len, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, cfg.num_kv_heads, max_len, cfg.head_dim), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def init_decode_caches(cfg: ModelConfig, routing: Tuple[str, ...],
+                       batch: int, max_len: int):
+    """Per-layer cache list for a *static* routing pattern.
+
+    routing[i] ∈ {"fa", "sa"} for routed attn layers; non-attn layers
+    derive their cache from the layer kind.
+    """
+    caches = []
+    for i, kind in enumerate(cfg.layer_kinds):
+        mode = routing[i] if kind == "attn" else None
+        caches.append(init_layer_cache(cfg, kind, mode, batch, max_len))
+    return caches

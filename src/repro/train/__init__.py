@@ -1,0 +1,7 @@
+from repro.train import checkpoint, optimizer  # noqa: F401
+from repro.train.train_loop import (  # noqa: F401
+    ContinuedTrainer,
+    PretrainTrainer,
+    RouterTrainer,
+    cross_entropy,
+)

@@ -1,0 +1,72 @@
+"""msgpack pytree checkpointing (no external deps beyond msgpack)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+try:  # bfloat16 et al. (ships with jax)
+    import ml_dtypes
+
+    def _np_dtype(name: str):
+        try:
+            return np.dtype(name)
+        except TypeError:
+            return np.dtype(getattr(ml_dtypes, name))
+except ImportError:  # pragma: no cover
+    def _np_dtype(name: str):
+        return np.dtype(name)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(path: str, tree: Any) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    payload = {}
+    for p, leaf in flat:
+        arr = np.asarray(leaf)
+        payload[_path_str(p)] = {
+            b"dtype": str(arr.dtype).encode(),
+            b"shape": list(arr.shape),
+            b"data": arr.tobytes(),
+        }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (same paths required)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=True)
+    payload = {(k.decode() if isinstance(k, bytes) else k): v
+               for k, v in payload.items()}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = _path_str(p)
+        if key not in payload:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        rec = payload[key]
+        arr = np.frombuffer(
+            rec[b"data"], dtype=_np_dtype(rec[b"dtype"].decode())
+        ).reshape(rec[b"shape"])
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)

@@ -1,0 +1,109 @@
+"""AdamW with decoupled weight decay + schedules + ascent groups.
+
+Self-contained (no optax).  Supports:
+  * pytree masking — only leaves marked trainable carry state/updates;
+  * gradient-*ascent* groups (the Lagrange multipliers of Eq. 6 are
+    maximized: sign-flipped update + projection to λ ≥ 0);
+  * cosine decay with linear warmup (paper App. D: warmup 20%).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import register_dataclass
+
+
+# ---------------------------------------------------------------------------
+# Pytree partitioning (trainable vs frozen)
+# ---------------------------------------------------------------------------
+
+def partition(tree, mask):
+    """Split by boolean mask tree → (trainable, frozen); None elsewhere."""
+    train = jax.tree.map(lambda m, x: x if m else None, mask, tree)
+    frozen = jax.tree.map(lambda m, x: None if m else x, mask, tree)
+    return train, frozen
+
+
+def combine(a, b):
+    """Inverse of ``partition`` (None-aware merge)."""
+    return jax.tree.map(lambda x, y: x if x is not None else y, a, b,
+                        is_leaf=lambda z: z is None)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_warmup(base_lr: float, total_steps: int,
+                  warmup_frac: float = 0.2,
+                  final_frac: float = 0.05) -> Callable:
+    warmup = max(1, int(total_steps * warmup_frac))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / warmup
+        t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@register_dataclass
+@dataclass
+class AdamState:
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamState:
+    z = jax.tree.map(
+        lambda x: jnp.zeros_like(x, jnp.float32) if x is not None else None,
+        params, is_leaf=lambda z: z is None)
+    return AdamState(mu=z, nu=jax.tree.map(
+        lambda x: None if x is None else jnp.zeros_like(x),
+        z, is_leaf=lambda y: y is None), count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, ascend: bool = False):
+    """One AdamW step.  ``ascend=True`` flips the update (gradient
+    ascent, used for the Lagrange multipliers)."""
+    c = state.count + 1
+    isnone = lambda z: z is None
+
+    def new_mu(g, m):
+        return None if g is None else b1 * m + (1 - b1) * g.astype(
+            jnp.float32)
+
+    def new_nu(g, v):
+        return None if g is None else b2 * v + (1 - b2) * jnp.square(
+            g.astype(jnp.float32))
+
+    mu = jax.tree.map(new_mu, grads, state.mu, is_leaf=isnone)
+    nu = jax.tree.map(new_nu, grads, state.nu, is_leaf=isnone)
+
+    def upd(m, v, p):
+        if m is None or p is None:
+            return None
+        mhat = m / (1 - b1 ** c)
+        vhat = v / (1 - b2 ** c)
+        step = lr * mhat / (jnp.sqrt(vhat) + eps)
+        if ascend:  # gradient ascent; no decay on multipliers
+            new_p = p.astype(jnp.float32) + step
+        else:
+            new_p = (p.astype(jnp.float32) - step
+                     - lr * weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype)
+
+    new_params = jax.tree.map(upd, mu, nu, params, is_leaf=isnone)
+    return new_params, AdamState(mu=mu, nu=nu, count=c)

@@ -1,0 +1,286 @@
+"""Training loops.
+
+``RouterTrainer`` reproduces the paper's parameter-efficient recipe
+(§3.2, App. D): the backbone is frozen, only Layer-Router parameters
+train (lr 5e-4), the Lagrange multipliers λ₁, λ₂ are *ascended*
+(lr 1e-3) and projected to ≥0, the Gumbel temperature anneals linearly,
+and the loss is CE + λ₁·L_diff + λ₂·L_diff² per task type (Eq. 6).
+
+``PretrainTrainer`` trains all parameters (used to build the small
+backbones our accuracy benches evaluate — the paper starts from
+pretrained Qwen/Llama checkpoints which are not available offline).
+
+``ContinuedTrainer`` freezes the *router* and trains the backbone
+(paper §5.3 backbone-adaptation experiment).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import router as R
+from repro.core import sparsity as SP
+from repro.data.synthetic import Batch
+from repro.models import model as MD
+from repro.train import optimizer as OPT
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _sum_aux(aux: Dict[str, jax.Array], key: str) -> jax.Array:
+    v = aux.get(key)
+    return jnp.sum(v) if v is not None else jnp.float32(0.0)
+
+
+def chunked_cross_entropy(hidden: jax.Array, w: jax.Array,
+                          labels: jax.Array, mask: jax.Array,
+                          chunk: int = 512) -> jax.Array:
+    """CE computed per sequence chunk — the (B,S,V) logits tensor is
+    never materialized (at 256k vocab it would dominate memory)."""
+    B, S, d = hidden.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = hidden.shape[1] // c
+    hs = jnp.moveaxis(hidden.reshape(B, nc, c, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, nc, c), 1, 0)
+
+    def body(carry, xs):
+        hc, lc, mc = xs
+        logits = (hc @ w.astype(hc.dtype)).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, lc[..., None], axis=-1)[..., 0]
+        return carry - (ll * mc).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hs, ls, ms))
+    return total / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Router training (the paper's recipe)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RouterTrainer:
+    cfg: ModelConfig
+    total_steps: int
+    lr_router: float = 5e-4      # paper: Mask LR 5e-4
+    lr_lagrange: float = 1e-3    # paper: Reg LR 1e-3
+    weight_decay: float = 0.1
+
+    def init(self, params, key=None):
+        mask = MD.router_param_filter(params)
+        trainable, frozen = OPT.partition(params, mask)
+        lagrange = SP.lagrangian_init(self.cfg.flux, key)
+        return {
+            "trainable": trainable,
+            "frozen": frozen,
+            "lagrange": lagrange,
+            "opt_router": OPT.adamw_init(trainable),
+            "opt_lagrange": OPT.adamw_init(lagrange),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def params(self, state) -> Any:
+        return OPT.combine(state["trainable"], state["frozen"])
+
+    @partial(jax.jit, static_argnums=0)
+    def step(self, state, tokens, labels, loss_mask, task_type, rng):
+        return self.step_impl(state, tokens, labels, loss_mask, task_type,
+                              rng)
+
+    def step_impl(self, state, tokens, labels, loss_mask, task_type, rng,
+                  prefix_embeddings=None, encoder_frames=None):
+        cfg = self.cfg
+        routed = bool(cfg.routable_layers()) and cfg.flux.enabled
+        tau = R.anneal_tau(cfg.flux, state["step"], self.total_steps)
+        lr_r = OPT.cosine_warmup(self.lr_router, self.total_steps)(
+            state["step"])
+        lr_l = OPT.cosine_warmup(self.lr_lagrange, self.total_steps)(
+            state["step"])
+
+        def loss_fn(trainable, lagrange):
+            params = OPT.combine(trainable, state["frozen"])
+            out = MD.forward_train(params, cfg, tokens, rng=rng, tau=tau,
+                                   output_hidden=True,
+                                   prefix_embeddings=prefix_embeddings,
+                                   encoder_frames=encoder_frames)
+            ce = chunked_cross_entropy(
+                out.logits, MD.unembed_matrix(params, cfg), labels,
+                loss_mask)
+            if routed:
+                sp, diag = SP.sparsity_loss(out.r_soft, task_type, lagrange,
+                                            cfg.flux)
+                soft_msr = jnp.mean(1.0 - out.r_soft)
+                l_diff = diag["l_diff"]
+                per_task = diag["per_task_sparsity"]
+            else:  # e.g. attention-free SSM: nothing to route
+                sp = jnp.float32(0.0)
+                soft_msr = jnp.float32(jnp.nan)
+                n = cfg.flux.num_task_types
+                l_diff = per_task = jnp.zeros((n,), jnp.float32)
+            loss = ce + sp
+            metrics = {
+                "loss": loss, "ce": ce, "sparsity_loss": sp,
+                "soft_msr": soft_msr,
+                "l_diff": l_diff,
+                "per_task_sparsity": per_task,
+                "tau": tau,
+            }
+            return loss, metrics
+
+        (loss, metrics), (g_router, g_lagrange) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(
+                state["trainable"], state["lagrange"])
+        new_trainable, opt_r = OPT.adamw_update(
+            g_router, state["opt_router"], state["trainable"], lr=lr_r,
+            weight_decay=self.weight_decay)
+        # max over λ: ascent + projection to λ ≥ 0
+        new_lagrange, opt_l = OPT.adamw_update(
+            g_lagrange, state["opt_lagrange"], state["lagrange"], lr=lr_l,
+            ascend=True)
+        new_lagrange = SP.project_lagrange(new_lagrange)
+        metrics["lambda1"] = new_lagrange["lambda1"]
+        metrics["lambda2"] = new_lagrange["lambda2"]
+        new_state = {
+            "trainable": new_trainable, "frozen": state["frozen"],
+            "lagrange": new_lagrange, "opt_router": opt_r,
+            "opt_lagrange": opt_l, "step": state["step"] + 1,
+        }
+        return new_state, metrics
+
+    def run(self, state, data_iter, steps: int, log_every: int = 50,
+            seed: int = 0, log_fn=print):
+        key = jax.random.key(seed)
+        history = []
+        for i in range(steps):
+            b: Batch = next(data_iter)
+            key, sub = jax.random.split(key)
+            state, m = self.step(state, jnp.asarray(b.tokens),
+                                 jnp.asarray(b.labels),
+                                 jnp.asarray(b.loss_mask),
+                                 jnp.asarray(b.task_type), sub)
+            if i % log_every == 0 or i == steps - 1:
+                rec = {k: np.asarray(v).tolist() for k, v in m.items()}
+                rec["step"] = i
+                history.append(rec)
+                log_fn(f"[router {i:5d}] loss={rec['loss']:.4f} "
+                       f"ce={rec['ce']:.4f} msr={rec['soft_msr']:.3f} "
+                       f"tau={rec['tau']:.2f}")
+        return state, history
+
+
+# ---------------------------------------------------------------------------
+# Backbone pretraining (substrate for the accuracy benches)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PretrainTrainer:
+    cfg: ModelConfig
+    total_steps: int
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    moe_balance_coef: float = 0.01
+    flux_soft: bool = False  # joint backbone+router training if True
+
+    def init(self, params):
+        return {"params": params, "opt": OPT.adamw_init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    @partial(jax.jit, static_argnums=0)
+    def step(self, state, tokens, labels, loss_mask, rng):
+        cfg = self.cfg
+        lr = OPT.cosine_warmup(self.lr, self.total_steps, 0.05)(
+            state["step"])
+
+        def loss_fn(params):
+            out = MD.forward_train(params, cfg, tokens, rng=rng,
+                                   flux_soft=self.flux_soft, tau=1.0)
+            ce = cross_entropy(out.logits, labels, loss_mask)
+            bal = _sum_aux(out.aux, "moe_balance")
+            return ce + self.moe_balance_coef * bal, {"ce": ce, "bal": bal}
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        new_params, opt = OPT.adamw_update(
+            grads, state["opt"], state["params"], lr=lr,
+            weight_decay=self.weight_decay)
+        metrics["loss"] = loss
+        return ({"params": new_params, "opt": opt,
+                 "step": state["step"] + 1}, metrics)
+
+    def run(self, state, data_iter, steps: int, log_every: int = 50,
+            seed: int = 0, log_fn=print):
+        key = jax.random.key(seed)
+        history = []
+        for i in range(steps):
+            b: Batch = next(data_iter)
+            key, sub = jax.random.split(key)
+            state, m = self.step(state, jnp.asarray(b.tokens),
+                                 jnp.asarray(b.labels),
+                                 jnp.asarray(b.loss_mask), sub)
+            if i % log_every == 0 or i == steps - 1:
+                rec = {k: float(np.asarray(v)) for k, v in m.items()}
+                rec["step"] = i
+                history.append(rec)
+                log_fn(f"[pretrain {i:5d}] loss={rec['loss']:.4f} "
+                       f"ce={rec['ce']:.4f}")
+        return state, history
+
+
+# ---------------------------------------------------------------------------
+# Continued training with a frozen router (paper §5.3)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ContinuedTrainer:
+    """Backbone adapts to the router's (fixed) sparse pathways."""
+    cfg: ModelConfig
+    total_steps: int
+    lr: float = 1e-4
+
+    def init(self, params):
+        mask = MD.router_param_filter(params)
+        router, backbone = OPT.partition(params, mask)
+        return {"backbone": backbone, "router": router,
+                "opt": OPT.adamw_init(backbone),
+                "step": jnp.zeros((), jnp.int32)}
+
+    @partial(jax.jit, static_argnums=0)
+    def step(self, state, tokens, labels, loss_mask, rng):
+        cfg = self.cfg
+        lr = OPT.cosine_warmup(self.lr, self.total_steps, 0.1)(state["step"])
+
+        def loss_fn(backbone):
+            params = OPT.combine(state["router"], backbone)
+            # Router frozen; routing still soft at a fixed low tau so the
+            # learned allocation shapes the gradients.
+            out = MD.forward_train(params, cfg, tokens, rng=rng,
+                                   tau=cfg.flux.tau_end)
+            ce = cross_entropy(out.logits, labels, loss_mask)
+            return ce, {"ce": ce}
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["backbone"])
+        new_backbone, opt = OPT.adamw_update(
+            grads, state["opt"], state["backbone"], lr=lr)
+        return ({"backbone": new_backbone, "router": state["router"],
+                 "opt": opt, "step": state["step"] + 1}, metrics)
+
+    def params(self, state):
+        return OPT.combine(state["router"], state["backbone"])

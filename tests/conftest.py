@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests and benches must see exactly ONE device (the dry-run pins 512
+# inside launch/dryrun.py only — never globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

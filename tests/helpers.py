@@ -1,0 +1,29 @@
+"""Shared test utilities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def naive_attention(q, k, v, mask_fn, q_offset=0, scale=None):
+    """Dense masked softmax oracle. q (B,Hq,Sq,D); k/v (B,Hkv,Skv,D);
+    mask_fn(q_pos col, k_pos row) → bool."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    q5 = q.reshape(B, Hkv, G, Sq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q5.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = q_offset + jnp.arange(Sq)
+    kp = jnp.arange(Skv)
+    s = jnp.where(mask_fn(qp[:, None], kp[None, :]), s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, v.shape[-1]).astype(q.dtype)
+
+
+def rand_qkv(rng, B, Hq, Hkv, Sq, Skv, D, dtype=jnp.float32):
+    q = jnp.asarray(rng.normal(size=(B, Hq, Sq, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, Skv, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, Skv, D)), dtype)
+    return q, k, v

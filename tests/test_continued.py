@@ -1,0 +1,34 @@
+"""ContinuedTrainer (paper §5.3): router frozen, backbone adapts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.data import mixture_iterator
+from repro.models import model as MD
+from repro.train import ContinuedTrainer
+
+
+def test_continued_training_freezes_router_and_moves_backbone():
+    cfg = smoke_variant(get_config("phi3-mini-3.8b")).replace(
+        vocab_size=64)
+    params = MD.init_params(jax.random.key(0), cfg)
+    ct = ContinuedTrainer(cfg, total_steps=5, lr=1e-3)
+    state = ct.init(params)
+    router_before = jax.tree.leaves(state["router"])
+    emb_before = params["embed"]
+    it = mixture_iterator(cfg.vocab_size, 4, 48, seed=0)
+    key = jax.random.key(1)
+    for _ in range(3):
+        b = next(it)
+        key, sub = jax.random.split(key)
+        state, m = ct.step(state, jnp.asarray(b.tokens),
+                           jnp.asarray(b.labels),
+                           jnp.asarray(b.loss_mask), sub)
+        assert bool(jnp.isfinite(m["ce"]))
+    router_after = jax.tree.leaves(state["router"])
+    assert all(bool((a == b).all()) for a, b in
+               zip(router_before, router_after)
+               if a is not None and b is not None)
+    new_params = ct.params(state)
+    assert not bool((new_params["embed"] == emb_before).all())

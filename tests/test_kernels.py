@@ -1,0 +1,132 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype
+sweeps) — deliverable (c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def mk(B, Hq, Hkv, Sq, Skv, D, dtype=jnp.float32):
+    q = jnp.asarray(RNG.normal(size=(B, Hq, Sq, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, Skv, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, Skv, D)), dtype)
+    return q, k, v
+
+
+def fl(x):
+    return x.reshape(-1, *x.shape[2:])
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,bq,bk", [
+    (1, 2, 1, 128, 32, 32, 32),
+    (2, 4, 2, 100, 16, 32, 32),   # unaligned seq
+    (1, 2, 2, 256, 64, 64, 128),  # bk > bq
+    (1, 8, 2, 64, 8, 16, 16),     # G = 4
+])
+def test_flash_attention(B, Hq, Hkv, S, D, bq, bk, dtype):
+    q, k, v = mk(B, Hq, Hkv, S, S, D, dtype)
+    out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk,
+                              interpret=True)
+    r = ref.flash_attention_ref(fl(q), fl(k), fl(v)).reshape(q.shape)
+    assert float(jnp.abs(out.astype(jnp.float32)
+                         - r.astype(jnp.float32)).max()) < tol(dtype)
+
+
+def test_flash_attention_bidirectional():
+    q, k, v = mk(1, 2, 2, 96, 96, 32)
+    out = ops.flash_attention(q, k, v, causal=False, block_q=32,
+                              block_k=32, interpret=True)
+    r = ref.flash_attention_ref(fl(q), fl(k), fl(v),
+                                causal=False).reshape(q.shape)
+    assert float(jnp.abs(out - r).max()) < 2e-5
+
+
+@pytest.mark.parametrize("S,sink,local,bq,bk", [
+    (256, 32, 64, 32, 32),
+    (200, 16, 48, 32, 32),   # unaligned seq
+    (128, 0, 32, 32, 32),    # pure window
+    (256, 32, 32, 64, 32),   # window smaller than q block
+])
+def test_streaming_attention(S, sink, local, bq, bk):
+    q, k, v = mk(1, 2, 1, S, S, 32)
+    out = ops.streaming_attention(q, k, v, sink=sink, local=local,
+                                  block_q=bq, block_k=bk, interpret=True)
+    r = ref.streaming_attention_ref(fl(q), fl(k), fl(v), sink=sink,
+                                    local=local).reshape(q.shape)
+    assert float(jnp.abs(out - r).max()) < 2e-5
+
+
+@pytest.mark.parametrize("L,cur,ring", [(96, 63, False), (96, 39, True),
+                                        (130, 100, False)])
+def test_decode_attention(L, cur, ring):
+    B, Hq, Hkv, D = 2, 4, 2, 32
+    q, k, v = mk(B, Hq, Hkv, 1, L, D)
+    if ring:
+        perm = np.concatenate([np.arange(cur + 1),
+                               -np.ones(L - cur - 1)])
+        pos = jnp.asarray(RNG.permutation(perm), jnp.int32)
+    else:
+        pos = jnp.arange(L, dtype=jnp.int32)
+    out = ops.decode_attention(q, k, v, pos, jnp.int32(cur), block_k=32,
+                               interpret=True)
+    r = ref.decode_attention_ref(fl(q), fl(k), fl(v), pos,
+                                 cur).reshape(q.shape)
+    assert float(jnp.abs(out - r).max()) < 2e-5
+
+
+def test_block_sparse_attention():
+    B, Hq, Hkv, S, D, blk = 1, 2, 1, 256, 32, 32
+    q, k, v = mk(B, Hq, Hkv, S, S, D)
+    nqb, K = S // blk, 3
+    sel = np.full((B, Hq, nqb, K), -1, np.int32)
+    for h in range(Hq):
+        for i in range(nqb):
+            cand = RNG.choice(i + 1, size=min(K, i + 1), replace=False)
+            sel[0, h, i, :len(cand)] = cand
+            if i not in cand:
+                sel[0, h, i, 0] = i
+    sel = jnp.asarray(sel)
+    out = ops.block_sparse_attention(q, k, v, sel, block=blk,
+                                     interpret=True)
+    r = ref.block_sparse_attention_ref(
+        fl(q), fl(k), fl(v), sel.reshape(-1, nqb, K),
+        block=blk).reshape(q.shape)
+    assert float(jnp.abs(out - r).max()) < 2e-5
+
+
+def test_block_sparse_duplicate_selection_deduped():
+    """Repeated indices in the selection must not double-count."""
+    B, Hq, Hkv, S, D, blk = 1, 1, 1, 64, 16, 32
+    q, k, v = mk(B, Hq, Hkv, S, S, D)
+    sel = jnp.asarray([[[0, 0, 0], [0, 1, 1]]], jnp.int32)[None]
+    out = ops.block_sparse_attention(q, k, v, sel[0][None],
+                                     block=blk, interpret=True)
+    clean = jnp.asarray([[[0, -1, -1], [0, 1, -1]]], jnp.int32)
+    r = ref.block_sparse_attention_ref(fl(q), fl(k), fl(v), clean,
+                                       block=blk).reshape(q.shape)
+    assert float(jnp.abs(out - r).max()) < 2e-5
+
+
+def test_kernel_matches_modes_engine():
+    """Kernels and the jnp mode engine agree (same semantics, two
+    implementations)."""
+    from repro.core import modes as M
+    q, k, v = mk(1, 4, 2, 128, 128, 32)
+    a = ops.flash_attention(q, k, v, block_q=32, block_k=32,
+                            interpret=True)
+    b = M.attention(q, k, v, M.FULL, block_q=32)
+    assert float(jnp.abs(a - b).max()) < 2e-5
+    a = ops.streaming_attention(q, k, v, sink=32, local=32, block_q=32,
+                                block_k=32, interpret=True)
+    b = M.attention(q, k, v, M.AttnMode("streaming", sink=32, local=32),
+                    block_q=32)
+    assert float(jnp.abs(a - b).max()) < 2e-5

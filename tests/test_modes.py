@@ -1,0 +1,115 @@
+"""Attention-mode engine vs dense oracle (all modes, GQA, offsets)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import naive_attention, rand_qkv
+from repro.core import modes as M
+
+RNG = np.random.default_rng(0)
+TOL = 3e-5
+
+
+def masks(S):
+    return {
+        "full": (M.FULL, lambda qp, kp: kp <= qp),
+        "bidi": (M.BIDIRECTIONAL, lambda qp, kp: (kp <= qp) | (kp > qp)),
+        "window": (M.window_mode(12),
+                   lambda qp, kp: (kp <= qp) & (qp - kp < 12)),
+        "streaming": (M.AttnMode("streaming", sink=8, local=12),
+                      lambda qp, kp: (kp <= qp)
+                      & ((qp - kp < 12) | (kp < 8))),
+        "triangle": (M.AttnMode("triangle", sink=8, local=12, chunk=16),
+                     lambda qp, kp: (kp <= qp)
+                     & (((qp - kp < 12) | (kp < 8)) | (qp >= S - 16))),
+    }
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,bq", [
+    (2, 4, 2, 64, 16, 16),
+    (1, 4, 4, 50, 8, 16),   # odd seq, MHA
+    (2, 8, 2, 33, 32, 8),   # odd seq, G=4
+    (1, 6, 6, 64, 64, 32),
+    (1, 2, 1, 96, 16, 96),  # single q block
+])
+def test_modes_match_oracle(B, Hq, Hkv, S, D, bq):
+    q, k, v = rand_qkv(RNG, B, Hq, Hkv, S, S, D)
+    for name, (mode, mask) in masks(S).items():
+        out = M.attention(q, k, v, mode, block_q=bq)
+        ref = naive_attention(q, k, v, mask)
+        err = float(jnp.abs(out - ref).max())
+        assert err < TOL, (name, err)
+
+
+def test_q_offset_chunked_prefill():
+    q, k, v = rand_qkv(RNG, 2, 4, 2, 64, 64, 16)
+    full = naive_attention(q, k, v, lambda qp, kp: kp <= qp)
+    out = M.attention(q[:, :, 48:], k, v, M.FULL, q_offset=48, block_q=8)
+    assert float(jnp.abs(out - full[:, :, 48:]).max()) < TOL
+    sm = M.AttnMode("streaming", sink=8, local=12)
+    ref = naive_attention(q, k, v,
+                          lambda qp, kp: (kp <= qp)
+                          & ((qp - kp < 12) | (kp < 8)))
+    out = M.attention(q[:, :, 48:], k, v, sm, q_offset=48, block_q=8)
+    assert float(jnp.abs(out - ref[:, :, 48:]).max()) < TOL
+
+
+def test_block_topk_keep_all_equals_full():
+    q, k, v = rand_qkv(RNG, 1, 4, 2, 64, 64, 16)
+    mode = M.AttnMode("block_topk", block=16, stride=4, threshold=0.0)
+    out = M.attention(q, k, v, mode)
+    ref = naive_attention(q, k, v, lambda qp, kp: kp <= qp)
+    assert float(jnp.abs(out - ref).max()) < TOL
+
+
+def test_block_topk_sparse_includes_diag_and_sink():
+    """Forced diag+sink blocks: early rows (inside block 0) must match
+    full attention exactly."""
+    q, k, v = rand_qkv(RNG, 1, 2, 1, 128, 128, 16)
+    mode = M.AttnMode("block_topk", block=16, stride=4, threshold=0.9)
+    out = M.attention(q, k, v, mode)
+    ref = naive_attention(q, k, v, lambda qp, kp: kp <= qp)
+    assert float(jnp.abs(out[:, :, :16] - ref[:, :, :16]).max()) < TOL
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_head_split_attention():
+    q, k, v = rand_qkv(RNG, 2, 8, 4, 48, 48, 16)
+    sa = M.AttnMode("streaming", sink=8, local=12)
+    out = M.head_split_attention(q, k, v, 2, sa, block_q=16)
+    # first 2 kv heads (4 q heads) = full; rest streaming
+    full = naive_attention(q[:, :4], k[:, :2], v[:, :2],
+                           lambda qp, kp: kp <= qp)
+    stream = naive_attention(q[:, 4:], k[:, 2:], v[:, 2:],
+                             lambda qp, kp: (kp <= qp)
+                             & ((qp - kp < 12) | (kp < 8)))
+    assert float(jnp.abs(out[:, :4] - full).max()) < TOL
+    assert float(jnp.abs(out[:, 4:] - stream).max()) < TOL
+
+
+def test_mode_flops_ordering():
+    """Sparse modes must cost less than full at long S (the paper's
+    premise)."""
+    S, H, D = 32768, 32, 128
+    fl = M.mode_flops(M.FULL, S, S, H, D)
+    ssa = M.mode_flops(M.AttnMode("streaming", sink=128, local=2048),
+                       S, S, H, D)
+    ta = M.mode_flops(M.AttnMode("triangle", sink=128, local=2048,
+                                 chunk=16384), S, S, H, D)
+    xa = M.mode_flops(M.AttnMode("block_topk", block=128, stride=16,
+                                 threshold=0.9), S, S, H, D)
+    assert ssa < 0.2 * fl
+    assert xa < 0.5 * fl
+    assert ssa < ta < fl
+
+
+def test_v_head_dim_mismatch():
+    """MLA-style: v head dim differs from qk head dim."""
+    B, Hq, Hkv, S, Dqk, Dv = 1, 4, 4, 32, 24, 16
+    q = jnp.asarray(RNG.normal(size=(B, Hq, S, Dqk)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, Dqk)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, Dv)), jnp.float32)
+    out = M.attention(q, k, v, M.FULL, block_q=16)
+    ref = naive_attention(q, k, v, lambda qp, kp: kp <= qp)
+    assert out.shape == (B, Hq, S, Dv)
+    assert float(jnp.abs(out - ref).max()) < TOL

@@ -1,0 +1,124 @@
+"""Layer Router + sparsity objective, incl. hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import FluxConfig
+from repro.core import router as R
+from repro.core import sparsity as SP
+
+FLUX = FluxConfig(pool_size=8, router_hidden=16)
+
+
+def _params(in_dim=32):
+    return R.router_init(jax.random.key(0), in_dim, FLUX)
+
+
+def test_router_shapes():
+    p = _params()
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, 40, 32)),
+                    jnp.float32)
+    logits = R.router_logits(p, x, FLUX.pool_size)
+    assert logits.shape == (3, 2)
+    r = R.soft_route(p, x, FLUX, 1.0, jax.random.key(1))
+    assert r.shape == (3,)
+    assert bool(((r > 0) & (r < 1)).all())
+    hard, pfa = R.hard_route(p, x, FLUX)
+    assert set(np.asarray(hard).tolist()) <= {0, 1}
+
+
+def test_pooling_length_invariance():
+    """Paper Fig. 9: router cost/feature depends only on the boundary
+    tokens — identical prefix+suffix ⇒ identical decision at any S."""
+    p = _params()
+    rng = np.random.default_rng(1)
+    pre = rng.normal(size=(1, 8, 32))
+    suf = rng.normal(size=(1, 8, 32))
+    for mid_len in (0, 16, 256):
+        mid = rng.normal(size=(1, mid_len, 32))
+        x = jnp.asarray(np.concatenate([pre, mid, suf], 1), jnp.float32)
+        out = R.router_logits(p, x, FLUX.pool_size)
+        if mid_len == 0:
+            base = out
+        else:
+            assert float(jnp.abs(out - base).max()) < 1e-5
+
+
+def test_gumbel_softmax_converges_to_argmax():
+    """As τ→0 the soft weight approaches the hard decision (the paper's
+    train→inference discretization) — for *confident* logits; a random
+    init gives ~zero margin, so scale the input to separate them."""
+    p = _params()
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(4, 20, 32)),
+                    jnp.float32) * 50.0
+    logits = R.router_logits(p, x, FLUX.pool_size)
+    margin = np.abs(np.asarray(logits[:, 0] - logits[:, 1]))
+    assert margin.max() > 0.5  # confident examples exist at this scale
+    confident = margin > 0.5
+    hard, _ = R.hard_route(p, x, FLUX)
+    agree, n = 0.0, 50
+    for i in range(n):
+        r = R.soft_route(p, x, FLUX, 0.01, jax.random.key(i))
+        match = (np.asarray(r > 0.5).astype(int) == np.asarray(hard))
+        agree += match[confident].mean()
+    assert agree / n > 0.9
+
+
+def test_anneal_tau_monotone():
+    flux = FluxConfig(tau_start=5.0, tau_end=0.1)
+    taus = [float(R.anneal_tau(flux, s, 100)) for s in range(0, 101, 10)]
+    assert taus[0] == pytest.approx(5.0)
+    assert taus[-1] == pytest.approx(0.1)
+    assert all(a >= b for a, b in zip(taus, taus[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Sparsity objective
+# ---------------------------------------------------------------------------
+
+def test_msr():
+    r = jnp.asarray([[1, 0, 0, 1], [0, 0, 0, 0]], jnp.float32)
+    np.testing.assert_allclose(np.asarray(SP.msr(r)), [0.5, 1.0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(0, 1))
+def test_sparsity_loss_properties(B, L, task):
+    """Loss is zero-gradient-free only at the budget; deviation is
+    penalized in the direction of the sign of λ terms."""
+    flux = FluxConfig()
+    lag = {"lambda1": jnp.asarray([0.5, 0.5]),
+           "lambda2": jnp.asarray([1.0, 1.0])}
+    t = float(SP.target_table(flux)[task])
+    task_type = jnp.full((B,), task, jnp.int32)
+    # exactly at budget → L_diff = 0 → loss 0
+    r_at = jnp.full((B, L), 1.0 - t, jnp.float32)
+    loss_at, diag = SP.sparsity_loss(r_at, task_type, lag, flux)
+    assert abs(float(loss_at)) < 1e-5
+    # above-budget sparsity costs more via the quadratic term
+    r_over = jnp.clip(r_at - 0.3, 0.0, 1.0)
+    loss_over, _ = SP.sparsity_loss(r_over, task_type, lag, flux)
+    r_under = jnp.clip(r_at + 0.3, 0.0, 1.0)
+    loss_under, _ = SP.sparsity_loss(r_under, task_type, lag, flux)
+    assert float(loss_over) >= float(loss_at) - 1e-6 or \
+        float(loss_under) <= float(loss_at) + 1e-6
+
+
+def test_lagrange_projection():
+    lag = {"lambda1": jnp.asarray([-0.5, 0.3]),
+           "lambda2": jnp.asarray([0.1, -2.0])}
+    p = SP.project_lagrange(lag)
+    assert bool((p["lambda1"] >= 0).all())
+    assert bool((p["lambda2"] >= 0).all())
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0.0, 1.0), min_size=2, max_size=16))
+def test_msr_bounds(rs):
+    """Ω_MSR ∈ [0, 1] for any routing vector (hypothesis)."""
+    r = jnp.asarray(rs, jnp.float32)[None]
+    m = float(SP.msr(r)[0])
+    assert -1e-6 <= m <= 1 + 1e-6

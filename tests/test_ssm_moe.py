@@ -1,0 +1,142 @@
+"""Mamba2 SSD + MoE correctness, incl. hypothesis shape sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as MOE
+from repro.models import ssm
+
+RNG = np.random.default_rng(3)
+
+
+def naive_ssd(x, dt, A, Bm, Cm):
+    B_, S_, H_, P_ = x.shape
+    N = Bm.shape[-1]
+    h = np.zeros((B_, H_, P_, N))
+    ys = []
+    for s in range(S_):
+        dA = np.exp(np.asarray(dt[:, s]) * np.asarray(A))
+        h = h * dA[:, :, None, None] + np.einsum(
+            "bh,bhp,bn->bhpn", np.asarray(dt[:, s]), np.asarray(x[:, s]),
+            np.asarray(Bm[:, s]))
+        ys.append(np.einsum("bhpn,bn->bhp", h, np.asarray(Cm[:, s])))
+    return np.stack(ys, 1), h
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(3, 40), st.integers(1, 4),
+       st.sampled_from([4, 8]), st.sampled_from([2, 4]),
+       st.sampled_from([4, 8, 16]))
+def test_ssd_chunked_matches_recurrence(B, S, H, P, N, chunk):
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 1.0, size=(B, S, H)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, N)), jnp.float32)
+    y, hf = ssm.ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    yr, hr = naive_ssd(x, dt, A, Bm, Cm)
+    assert np.abs(np.asarray(y) - yr).max() < 1e-4
+    assert np.abs(np.asarray(hf) - hr).max() < 1e-4
+
+
+def _ssm_cfg():
+    return ModelConfig(
+        name="t", family="ssm", num_layers=1, d_model=32, num_heads=0,
+        num_kv_heads=0, head_dim=0, d_ff=0, vocab_size=64,
+        layer_pattern=("mamba",), ssm_state_dim=8, ssm_head_dim=16,
+        ssm_expand=2, ssm_chunk=8, dtype=jnp.float32,
+        param_dtype=jnp.float32)
+
+
+def test_mamba_block_decode_matches_full():
+    cfg = _ssm_cfg()
+    params = ssm.mamba_init(jax.random.key(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 12, 32)), jnp.float32)
+    y_full, _ = ssm.mamba_apply(params, cfg, x)
+    y_pre, (h, tail) = ssm.mamba_apply(params, cfg, x[:, :8])
+    ys = [y_pre]
+    for i in range(8, 12):
+        y1, h, tail = ssm.mamba_decode_step(params, cfg, x[:, i:i + 1],
+                                            h, tail)
+        ys.append(y1)
+    err = float(jnp.abs(y_full - jnp.concatenate(ys, 1)).max())
+    assert err < 1e-4
+
+
+def test_mamba_chunked_prefill_state_carry():
+    cfg = _ssm_cfg()
+    params = ssm.mamba_init(jax.random.key(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(1, 15, 32)), jnp.float32)
+    y_full, _ = ssm.mamba_apply(params, cfg, x)
+    y_a, stt = ssm.mamba_apply(params, cfg, x[:, :6])
+    y_b, _ = ssm.mamba_apply(params, cfg, x[:, 6:], state=stt)
+    err = float(jnp.abs(y_full - jnp.concatenate([y_a, y_b], 1)).max())
+    assert err < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def _moe_cfg(E=4, k=2, dropless=True):
+    return ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, head_dim=8, d_ff=32, vocab_size=64,
+        moe_layers="all", num_experts=E, top_k=k, moe_d_ff=32,
+        moe_capacity_factor=float(E) if dropless else 1.0,
+        num_shared_experts=1, dtype=jnp.float32, param_dtype=jnp.float32)
+
+
+def test_moe_dropless_matches_dense_expert_sum():
+    """Dropless scatter-dispatch == direct per-token expert evaluation."""
+    cfg = _moe_cfg()
+    params = MOE.moe_init(jax.random.key(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 6, 16)), jnp.float32)
+    y, aux = MOE.moe_apply(params, cfg, x)
+
+    xf = x.reshape(-1, 16)
+    logits = xf @ params["gate_w"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    ew = params["experts"]
+
+    def expert(e, t):
+        h = jax.nn.silu(xf[t] @ ew["gate"][e]) * (xf[t] @ ew["up"][e])
+        return h @ ew["down"][e]
+
+    y_ref = np.zeros_like(np.asarray(xf))
+    for t in range(xf.shape[0]):
+        for j in range(cfg.top_k):
+            y_ref[t] += float(top_p[t, j]) * np.asarray(
+                expert(int(top_i[t, j]), t))
+    from repro.models.layers import ffn_apply
+    y_ref += np.asarray(ffn_apply(params["shared"], xf))
+    err = np.abs(np.asarray(y).reshape(-1, 16) - y_ref).max()
+    assert err < 1e-4
+    assert float(aux["drop_fraction"]) == 0.0
+
+
+def test_moe_capacity_drops_bounded():
+    cfg = _moe_cfg(dropless=False)
+    params = MOE.moe_init(jax.random.key(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(4, 16, 16)), jnp.float32)
+    y, aux = MOE.moe_apply(params, cfg, x)
+    assert 0.0 <= float(aux["drop_fraction"]) < 1.0
+    assert bool(jnp.isfinite(y).all())
+    assert float(aux["balance_loss"]) >= 1.0 - 1e-3  # ≥1 by Cauchy-Schwarz
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 8))
+def test_moe_load_conservation(B, S):
+    """Σ_e load_e == T·k (every assignment lands on exactly one expert)."""
+    cfg = _moe_cfg()
+    params = MOE.moe_init(jax.random.key(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(B, S, 16)), jnp.float32)
+    _, aux = MOE.moe_apply(params, cfg, x)
+    assert int(aux["load"].sum()) == B * S * cfg.top_k

@@ -1,0 +1,162 @@
+"""Training loop + data pipeline + checkpointing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config, smoke_variant
+from repro.core.sparsity import TASK_HOLISTIC, TASK_RETRIEVAL
+from repro.data import SyntheticTasks, mixture_iterator
+from repro.data.synthetic import KEY, QUERY, SYM0, VALUE
+from repro.models import model as MD
+from repro.train import (PretrainTrainer, RouterTrainer, checkpoint,
+                         cross_entropy)
+from repro.train.train_loop import chunked_cross_entropy
+from repro.train import optimizer as OPT
+
+
+# ---------------------------------------------------------------------------
+# Data
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.sampled_from([64, 100, 128]))
+def test_needle_batch_invariants(B, S):
+    gen = SyntheticTasks(vocab=256, seed=0)
+    rng = np.random.default_rng(1)
+    b = gen.needle_batch(rng, B, S)
+    assert b.tokens.shape == (B, S)
+    assert (b.loss_mask.sum(1) == 1).all()  # exactly one answer position
+    for i in range(B):
+        toks = b.tokens[i]
+        # the queried key appears in exactly one (KEY, k, v, SEP) record
+        key = toks[-1]
+        recs = np.where(toks == KEY)[0]
+        vals = [toks[p + 2] for p in recs if p + 2 < S
+                and toks[p + 1] == key]
+        assert vals == [b.labels[i, -1]]
+    assert (b.task_type == TASK_RETRIEVAL).all()
+
+
+def test_multihop_chain():
+    gen = SyntheticTasks(vocab=256, seed=0)
+    rng = np.random.default_rng(2)
+    b = gen.multihop_batch(rng, 4, 96)
+    for i in range(4):
+        toks = b.tokens[i]
+        k0 = toks[-1]
+        recs = {}
+        for p in np.where(toks == KEY)[0]:
+            if p + 2 < 96:
+                recs[toks[p + 1]] = toks[p + 2]
+        assert recs[recs[k0]] == b.labels[i, -1]
+
+
+def test_markov_task_type():
+    gen = SyntheticTasks(vocab=256, seed=0)
+    b = gen.markov_batch(np.random.default_rng(0), 2, 32)
+    assert (b.task_type == TASK_HOLISTIC).all()
+    assert (b.tokens >= SYM0).all()
+    assert b.loss_mask.all()
+
+
+def test_mixture_iterator_balanced():
+    it = mixture_iterator(256, 4, 64, seed=0)
+    types = [next(it).task_type[0] for _ in range(60)]
+    frac = np.mean([t == TASK_RETRIEVAL for t in types])
+    assert 0.2 < frac < 0.8
+
+
+# ---------------------------------------------------------------------------
+# Optimizer / losses
+# ---------------------------------------------------------------------------
+
+def test_chunked_ce_matches_dense():
+    rng = np.random.default_rng(0)
+    B, S, d, V = 2, 20, 8, 32
+    h = jnp.asarray(rng.normal(size=(B, S, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, V)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    mask = jnp.asarray(rng.random((B, S)) > 0.3, jnp.float32)
+    dense = cross_entropy(h @ w, labels, mask)
+    chunked = chunked_cross_entropy(h, w, labels, mask, chunk=7)
+    assert abs(float(dense) - float(chunked)) < 1e-4
+
+
+def test_adamw_descends_quadratic():
+    p = {"x": jnp.asarray([5.0, -3.0])}
+    state = OPT.adamw_init(p)
+    for _ in range(200):
+        g = jax.grad(lambda q: jnp.sum(q["x"] ** 2))(p)
+        p, state = OPT.adamw_update(g, state, p, lr=0.1,
+                                    weight_decay=0.0)
+    assert float(jnp.abs(p["x"]).max()) < 0.1
+
+
+def test_adamw_ascend_flips_direction():
+    p = {"l": jnp.asarray([0.5])}
+    state = OPT.adamw_init(p)
+    g = {"l": jnp.asarray([1.0])}  # ∂L/∂λ > 0 ⇒ ascent increases λ
+    p2, _ = OPT.adamw_update(g, state, p, lr=0.1, ascend=True)
+    assert float(p2["l"][0]) > 0.5
+
+
+def test_partition_combine_roundtrip():
+    tree = {"a": jnp.ones(3), "b": {"c": jnp.zeros(2), "d": jnp.ones(1)}}
+    mask = {"a": True, "b": {"c": False, "d": True}}
+    tr, fz = OPT.partition(tree, mask)
+    assert tr["b"]["c"] is None and fz["a"] is None
+    merged = OPT.combine(tr, fz)
+    assert all((x == y).all() for x, y in
+               zip(jax.tree.leaves(merged), jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# Trainers
+# ---------------------------------------------------------------------------
+
+def test_router_training_moves_msr_toward_target():
+    """Soft MSR should approach the per-task budget under the
+    Lagrangian (paper Fig. 10c)."""
+    cfg = smoke_variant(get_config("phi3-mini-3.8b")).replace(
+        vocab_size=64)
+    params = MD.init_params(jax.random.key(0), cfg)
+    rt = RouterTrainer(cfg, total_steps=60)
+    state = rt.init(params)
+    it = mixture_iterator(cfg.vocab_size, 8, 64, seed=0)
+    state, hist = rt.run(state, it, 60, log_every=59,
+                         log_fn=lambda *_: None)
+    # sparsity loss should not blow up; λ stays ≥ 0
+    assert all(l >= 0 for l in hist[-1]["lambda1"])
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_checkpoint_roundtrip_bf16():
+    cfg = smoke_variant(get_config("granite-moe-3b-a800m")).replace(
+        dtype=jnp.bfloat16, param_dtype=jnp.bfloat16)
+    params = MD.init_params(jax.random.key(0), cfg)
+    with tempfile.TemporaryDirectory() as d:
+        f = os.path.join(d, "ck.msgpack")
+        checkpoint.save(f, params)
+        p2 = checkpoint.load(f, params)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            assert a.dtype == b.dtype
+            assert bool((a == b).all())
+
+
+def test_pretrain_reduces_loss():
+    cfg = smoke_variant(get_config("phi3-mini-3.8b")).replace(
+        vocab_size=64, flux=get_config("phi3-mini-3.8b").flux.replace(
+            enabled=False))
+    params = MD.init_params(jax.random.key(0), cfg)
+    pt = PretrainTrainer(cfg, total_steps=40, lr=3e-3)
+    st = pt.init(params)
+    it = mixture_iterator(cfg.vocab_size, 8, 64, seed=0,
+                          weights={"markov": 1.0})
+    st, hist = pt.run(st, it, 40, log_every=39, log_fn=lambda *_: None)
+    assert hist[-1]["loss"] < hist[0]["loss"]
