@@ -1,0 +1,126 @@
+"""Decode-loop speedup: per-step host loop vs device-resident scan.
+
+The seed engine dispatched one jit call per generated token and synced
+the sampled token to host every step; ``decode_many`` fuses
+sample→decode for all steps into one executable (DESIGN.md §Serving).
+This bench measures decode tokens/sec and compiled-dispatch counts for
+both drivers across routing patterns (all-FA, all-SA, mixed), emitting
+``BENCH_decode.json`` for the perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from functools import partial
+from typing import List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CACHE_DIR, Row, bench_cfg, time_call
+from repro.models import model as MD
+from repro.serve import ServeEngine
+from repro.serve.engine import repack_caches
+
+B, S = 2, 48
+
+
+def _patterns(cfg):
+    kinds = cfg.layer_kinds
+    fa = tuple("fa" if k == "attn" else None for k in kinds)
+    sa = tuple("sa" if k == "attn" else None for k in kinds)
+    flip, mixed = True, []
+    for k in kinds:
+        mixed.append(("fa" if flip else "sa") if k == "attn" else None)
+        flip = not flip if k == "attn" else flip
+    return [("all-fa", fa), ("all-sa", sa), ("mixed", tuple(mixed))]
+
+
+def run(n_steps: int = 64, iters: int = 5) -> List[Row]:
+    cfg = bench_cfg()
+    params = MD.init_params(jax.random.key(0), cfg)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, size=(B, S)), jnp.int32)
+    max_len = S + n_steps + 2
+    eng = ServeEngine(params, cfg, max_len=max_len)
+    scan_fn = jax.jit(partial(MD.decode_many, cfg=cfg),
+                      static_argnames=("n_steps", "greedy"))
+    rows: List[Row] = []
+    results = []
+    for name, pattern in _patterns(cfg):
+        pf = eng._prefill(params=params, tokens=toks, routing_ctx="fa_only",
+                          prefix_embeddings=None, encoder_frames=None)
+
+        def fresh_caches():
+            return repack_caches(cfg, pf.caches, pattern, S, max_len)
+
+        step_fn = jax.jit(lambda token, caches, pos: MD.decode_step(
+            params, cfg, token, caches, pattern, pos))
+
+        def looped():
+            # the seed driver: one dispatch + one host sync per token
+            logits, caches = pf.logits, fresh_caches()
+            out = []
+            for i in range(n_steps):
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                out.append(np.asarray(nxt))
+                logits, caches = step_fn(nxt[:, None], caches,
+                                         jnp.int32(S + i))
+            return np.stack(out, 1)
+
+        def scanned():
+            toks_out, _, _ = scan_fn(
+                params=params, logits=pf.logits, caches=fresh_caches(),
+                pos=jnp.int32(S), rng=jax.random.key(0),
+                n_steps=n_steps, greedy=True, fa_heads=None)
+            return np.asarray(toks_out)
+
+        assert np.array_equal(looped(), scanned()), name
+        us_loop = time_call(looped, iters=iters)
+        us_scan = time_call(scanned, iters=iters)
+        tps_loop = B * n_steps / (us_loop / 1e6)
+        tps_scan = B * n_steps / (us_scan / 1e6)
+        speedup = us_loop / us_scan
+        results.append({
+            "pattern": name, "n_steps": n_steps, "batch": B,
+            "looped_us": us_loop, "scanned_us": us_scan,
+            "looped_tokens_per_sec": tps_loop,
+            "scanned_tokens_per_sec": tps_scan,
+            "speedup": speedup,
+            "looped_dispatches": n_steps, "scanned_dispatches": 1,
+        })
+        rows.append(Row(f"decode-speedup/{name}/looped", us_loop,
+                        f"tps={tps_loop:.0f};dispatches={n_steps}"))
+        rows.append(Row(f"decode-speedup/{name}/scanned", us_scan,
+                        f"tps={tps_scan:.0f};dispatches=1;"
+                        f"speedup={speedup:.2f}x"))
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    with open(os.path.join(CACHE_DIR, "BENCH_decode.json"), "w") as f:
+        json.dump({"timestamp": time.time(), "device":
+                   jax.default_backend(), "results": results}, f, indent=2)
+    return rows
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    rows = run(n_steps=8, iters=2) if smoke else run()
+    for r in rows:
+        print(r.csv())
+    if smoke:
+        # advisory, not a CI gate: shared CI runners make short-run
+        # decode timings too noisy to fail on — the WARN line is for
+        # humans reading the log (correctness IS gated: run() asserts
+        # looped and scanned tokens are identical)
+        data = json.load(open(os.path.join(CACHE_DIR, "BENCH_decode.json")))
+        slow = [r["pattern"] for r in data["results"] if r["speedup"] < 1.0]
+        print("# smoke ok" if not slow else f"# WARN scan slower on {slow}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,22 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.6 top-level export
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4/0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """Version-compat wrapper: the replication-check kwarg was renamed
+    ``check_rep`` → ``check_vma`` across jax versions."""
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
 
 
 def lse_combine_decode(q: jax.Array, k: jax.Array, v: jax.Array,

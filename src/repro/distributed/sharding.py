@@ -38,8 +38,13 @@ def logical_rules(rules: Dict[str, Optional[Tuple[str, ...]]]):
 
 
 def _live_mesh():
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        if get_abstract is not None:
+            mesh = get_abstract()
+        else:  # jax 0.4/0.5: the legacy ``with mesh:`` ambient mesh
+            from jax.interpreters import pxla
+            mesh = pxla.thread_resources.env.physical_mesh
     except Exception:
         return None
     if mesh is None or getattr(mesh, "empty", True) or not mesh.axis_names:

@@ -17,6 +17,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x names it TPUCompilerParams; jax >= 0.6 renamed it CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -35,10 +39,10 @@ def _kernel(sel_ref, q_ref, k_ref, v_ref, o_ref, acc, m_scr, l_scr, *,
     kv_block = sel_ref[b, i, j]
     q_pos = i * block + jax.lax.iota(jnp.int32, block)
     k_pos = kv_block * block + jax.lax.iota(jnp.int32, block)
-    # duplicate-selection guard: a block index may repeat when the
-    # scorer returns fewer than K distinct blocks; only the first
-    # occurrence (j == first index with this value) contributes.
-    # The ops wrapper dedupes selections, so here we only mask range.
+    # Duplicate selections must be resolved by the CALLER: this kernel
+    # only masks entries ``dedupe_selection`` marked -1 (plus causal /
+    # out-of-range positions) — it has no cross-j view, so a repeated
+    # non-negative index would be accumulated twice.
     q = q_ref[0].astype(jnp.float32)
     k = k_ref[0].astype(jnp.float32)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
@@ -116,7 +120,7 @@ def block_sparse_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((BH, Sq_p, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(sel.astype(jnp.int32), q, k, v)

@@ -22,6 +22,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x names it TPUCompilerParams; jax >= 0.6 renamed it CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -95,8 +99,38 @@ def decode_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((1, 1), jnp.float32),
             pltpu.VMEM((1, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, pos, cur)
     return out
+
+
+def make_kernel_decode_attn(*, block_k: int = 128,
+                            min_len: int = 2 * 128,
+                            interpret: Optional[bool] = None):
+    """Adapter installing this kernel as the serving decode backend.
+
+    Returns an fn matching ``repro.models.model.use_decode_attn``'s
+    protocol: fn(q (B,Hq,1,D), k/v (B,Hkv,L,D), valid (L,) bool) →
+    (B,Hq,1,D), or None to decline (per-KV-head masks from duo head
+    splits, and rings shorter than ``min_len`` where the dense dot
+    wins).  The (L,) validity mask is re-expressed in the kernel's
+    positions/-1 vocabulary, so FullKV prefixes and RingKV occupancy
+    masks both land on the same executable shape.
+    """
+    def fn(q: jax.Array, k: jax.Array, v: jax.Array,
+           valid: jax.Array) -> Optional[jax.Array]:
+        if valid.ndim != 1 or k.shape[2] < min_len:
+            return None
+        B, Hq, _, D = q.shape
+        Hkv, L = k.shape[1], k.shape[2]
+        positions = jnp.where(valid, jnp.arange(L, dtype=jnp.int32), -1)
+        out = decode_attention_bh(
+            q.reshape(B * Hq, 1, D), k.reshape(B * Hkv, L, D),
+            v.reshape(B * Hkv, L, D), positions, jnp.int32(L),
+            block_k=block_k,
+            interpret=(jax.default_backend() != "tpu"
+                       if interpret is None else interpret))
+        return out.reshape(B, Hq, 1, D)
+    return fn

@@ -23,7 +23,8 @@ from repro.configs import ALL_ARCHS, SHAPES, get_config  # noqa: E402
 from repro.distributed import logical_rules  # noqa: E402
 from repro.launch import hlo_analysis as HA  # noqa: E402
 from repro.launch import workloads as WL  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.mesh import (make_production_mesh,  # noqa: E402
+                                mesh_context)
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                          "artifacts", "dryrun")
@@ -48,7 +49,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     try:
         wl = WL.build_workload(cfg, shape, mesh, **wl_kw)
         record["workload"] = wl.name
-        with jax.set_mesh(mesh), logical_rules(wl.rules):
+        with mesh_context(mesh), logical_rules(wl.rules):
             lowered = jax.jit(wl.fn, in_shardings=wl.in_shardings).lower(
                 *wl.args)
             t_lower = time.time() - t0

@@ -49,6 +49,9 @@ _COND_BRANCHES = re.compile(
     r"|branch_computations=\{([^}]*)\})")
 _CONST = re.compile(r"constant\((\d+)\)")
 _DOT_DIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+# dot's lhs operand, in both HLO print dialects: untyped ``dot(%op, …)``
+# and typed ``dot(f32[64,64]{1,0} %op, …)`` (the type carries the shape).
+_DOT_LHS = re.compile(r" dot\((?:([a-z0-9]+)\[([0-9,]*)\]\S*\s+)?%([\w.\-]+)")
 _OPERANDS = re.compile(r"\(([^)]*)\)")
 
 _COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
@@ -180,10 +183,13 @@ class HloCostModel:
         if not m:
             return 1
         dims = [int(d) for d in m.group(1).split(",") if d]
-        # lhs operand is the first argument of dot(...)
-        call = line.split(" dot(", 1)[1]
-        first_op = call.split(",")[0].strip().lstrip("%").rstrip(")")
-        shape = self._operand_shapes.get(first_op)
+        lhs = _DOT_LHS.search(line)
+        shape = None
+        if lhs is not None:
+            if lhs.group(2) is not None:  # typed operand: shape inline
+                shape = [int(d) for d in lhs.group(2).split(",") if d]
+            else:                         # untyped: look up the def
+                shape = self._operand_shapes.get(lhs.group(3))
         if shape is None:
             return 1
         k = 1

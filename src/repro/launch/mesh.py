@@ -16,6 +16,24 @@ import jax
 from jax.sharding import Mesh
 
 
+def mesh_context(mesh: Mesh):
+    """Context manager activating ``mesh`` for sharding constraints:
+    ``jax.set_mesh`` on jax >= 0.6, the legacy ``with mesh:`` context
+    on 0.4/0.5."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
+def _make_mesh(shape, axes, devices) -> Mesh:
+    """``jax.make_mesh`` with explicit Auto axis types where the jax
+    version has them (>= 0.5); older versions only have Auto axes."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, devices=devices,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -26,17 +44,14 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"need {n} devices for mesh {shape}, have {len(devices)} — "
             "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before any jax import (see launch/dryrun.py)")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, devices=devices[:n],
-                         axis_types=auto)
+    return _make_mesh(shape, axes, devices[:n])
 
 
 def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Tiny mesh over the real local devices (tests)."""
     n = data * model
-    auto = (jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         devices=jax.devices()[:n], axis_types=auto)
+    return _make_mesh((data, model), ("data", "model"),
+                      jax.devices()[:n])
 
 
 # Hardware constants (TPU v5e) — used by the roofline analysis.

@@ -1,6 +1,8 @@
 from repro.models import model  # noqa: F401
 from repro.models.model import (  # noqa: F401
     ForwardOut,
+    decode_core,
+    decode_many,
     decode_step,
     forward_train,
     init_params,

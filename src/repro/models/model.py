@@ -6,8 +6,11 @@ stored *stacked by period position* — ``trunk[pos]`` is a pytree whose
 leaves carry a leading ``n_periods`` axis.  Train and prefill drivers
 ``lax.scan`` over periods (compile time stays O(period), not O(L));
 decode unrolls a python loop over layers because the per-layer cache
-*shapes* depend on the (static) routing pattern — the paper's
-sparse-decode memory saving is structural (kv_cache.py).
+*shapes* depend on the cache geometry chosen at repack time — the
+paper's sparse-decode memory saving is structural (kv_cache.py).
+Generation itself is a second ``lax.scan`` over decode steps
+(``decode_many``): sampling stays on device and the sampled-token →
+next-step dependency never round-trips to the host.
 
 Flux routing contexts:
   ("soft", tau, rng)   — Gumbel-Softmax blend of FA and SA (Eq. 5), train.
@@ -472,7 +475,18 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
-# Decode driver (python loop over layers; static routing pattern)
+# Decode driver (python loop over layers; polymorphic on cache geometry)
+#
+# The static axis of the compiled decode step is the per-layer *cache
+# geometry* — FullKV vs RingKV vs LatentKV vs RingLatentKV, which
+# genuinely changes compiled buffer shapes and flows in implicitly as
+# the caches pytree structure.  The fa/sa/duo routing pattern itself is
+# NOT static: any residual behavioral distinction between patterns that
+# share a geometry (today: how many KV heads of a full-cache layer run
+# full vs streaming attention) is traced data (``fa_heads``), so one
+# executable serves every routing pattern with the same geometry
+# (DESIGN.md §Serving) instead of one per pattern (2^routable worst
+# case for the old routing-tuple static argument).
 # ---------------------------------------------------------------------------
 
 def layer_params(params, cfg: ModelConfig, layer_idx: int):
@@ -574,13 +588,18 @@ def _dot_decode(q, k, v, valid):
     return o.reshape(B, Hq, 1, D).astype(q.dtype)
 
 
-def _decode_attn_headsplit(bp, cfg, x, pos, cache: KC.FullKV, n_fa_kv: int):
+def _decode_attn_headsplit(bp, cfg, x, pos, cache: KC.FullKV, n_fa_kv):
     """DuoAttention-style decode: the cache stays *full-shape* (ragged
     per-head histories are unrepresentable — the paper's §2.3 point);
-    streaming heads merely mask, saving FLOPs but no HBM traffic."""
+    streaming heads merely mask, saving FLOPs but no HBM traffic.
+
+    ``n_fa_kv`` may be a traced int32 scalar: the full/streaming head
+    split only shapes a mask, so patterns differing in it share one
+    executable (n_fa_kv == num_kv_heads reduces to full attention).
+    """
     positions = pos[None]
     q, k, v, _ = A.gqa_qkv(bp["attn"], cfg, x, positions)
-    cache = KC.full_insert(cache, k, v, pos)
+    cache = _full_kv_insert(cache, k, v, pos)
     L = cache.k.shape[2]
     idx = jnp.arange(L)
     full_valid = idx <= pos
@@ -593,12 +612,21 @@ def _decode_attn_headsplit(bp, cfg, x, pos, cache: KC.FullKV, n_fa_kv: int):
     return A.gqa_out(bp["attn"], cfg, o), cache
 
 
-def decode_step(params, cfg: ModelConfig, token: jax.Array, caches: List,
-                routing: Tuple[str, ...], pos: jax.Array, enc_out=None):
-    """One autoregressive step.
+def decode_core(params, cfg: ModelConfig, token: jax.Array, caches: List,
+                pos: jax.Array, enc_out=None, fa_heads=None,
+                duo_layers: Optional[Tuple[int, ...]] = None):
+    """One autoregressive step, dispatched on cache geometry.
 
-    token (B,1) int32; ``routing`` is the *static* per-layer pattern
-    ("fa" | "sa" | None) cached from prefill (§3.3 — router runs once).
+    token (B,1) int32.  Per-layer behavior derives from the cache
+    *type* (ring ⇒ sink+local streaming attention, full/latent ⇒ full
+    attention), so the compiled executable is keyed by geometry alone.
+    ``duo_layers`` (static tuple of layer indices) marks full-cache GQA
+    layers running a DuoAttention-style head split; for those,
+    ``fa_heads`` (num_layers,) int32 — *traced* — gives the number of
+    KV heads on full attention, so duo patterns differing only in the
+    split share one executable.  Layers outside ``duo_layers`` keep the
+    plain full-attention path (1-D validity mask, eligible for the
+    kernel / distributed decode overrides).
     Returns (logits (B,V), new_caches).
     """
     h = embed_tokens(params, cfg, token)
@@ -614,17 +642,17 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, caches: List,
             cache = KC.MambaCache(h=hstate, conv_tail=tail)
             h = h + y
         else:
-            if kind == "local":
-                y, cache = _decode_attn_ring(
-                    bp, cfg, x, pos, cache, 0, cache.k.shape[2])
-            elif isinstance(routing[i], tuple) and routing[i][0] == "duo":
-                y, cache = _decode_attn_headsplit(bp, cfg, x, pos, cache,
-                                                  routing[i][1])
-            elif routing[i] == "sa":
-                ring_local = (cache.ckv.shape[1] if cfg.use_mla
-                              else cache.k.shape[2]) - flux.sink
+            if isinstance(cache, (KC.RingKV, KC.RingLatentKV)):
+                sink = 0 if kind == "local" else flux.sink
+                ring = (cache.ckv.shape[1]
+                        if isinstance(cache, KC.RingLatentKV)
+                        else cache.k.shape[2])
                 y, cache = _decode_attn_ring(bp, cfg, x, pos, cache,
-                                             flux.sink, ring_local)
+                                             sink, ring - sink)
+            elif (duo_layers is not None and i in duo_layers
+                  and fa_heads is not None and not cfg.use_mla):
+                y, cache = _decode_attn_headsplit(bp, cfg, x, pos, cache,
+                                                  fa_heads[i])
             else:
                 y, cache = _decode_attn_full(bp, cfg, x, pos, cache)
             h = h + y
@@ -641,6 +669,85 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, caches: List,
         new_caches.append(cache)
     logits = logits_from_hidden(params, cfg, h[:, -1])
     return logits, new_caches
+
+
+def routing_head_split(cfg: ModelConfig, routing):
+    """Translate a routing pattern into (fa_heads, duo_layers):
+    the traced per-layer full-KV-head counts and the *static* tuple of
+    duo layer indices — (None, None) when no entry needs a head split
+    (pure geometry dispatch keeps the 1-D validity mask that
+    kernel/distributed overrides expect on every layer)."""
+    duo = tuple(i for i, r in enumerate(routing)
+                if isinstance(r, tuple) and r[0] == "duo")
+    if not duo:
+        return None, None
+    if cfg.use_mla:
+        raise ValueError(
+            "duo head-split routing requires per-KV-head GQA caches; "
+            "MLA shares one latent across heads (cfg.use_mla=True) so "
+            f"a split is meaningless — got duo at layers {duo}")
+    fa_heads = jnp.asarray(
+        [r[1] if isinstance(r, tuple) and r[0] == "duo"
+         else cfg.num_kv_heads for r in routing], jnp.int32)
+    return fa_heads, duo
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, caches: List,
+                routing: Tuple[str, ...], pos: jax.Array, enc_out=None):
+    """One autoregressive step (pattern-tuple convenience wrapper).
+
+    token (B,1) int32; ``routing`` is the per-layer pattern
+    ("fa" | "sa" | ("duo", n) | None) cached from prefill (§3.3 — the
+    router runs once).  The fa/sa entries are *informational* here: the
+    cache geometry built by ``repack_caches``/``init_decode_caches``
+    already encodes them, and ``decode_core`` dispatches on it — only
+    duo head splits survive (split counts as traced data, the duo
+    layer set as static structure).
+    Returns (logits (B,V), new_caches).
+    """
+    fa_heads, duo_layers = routing_head_split(cfg, routing)
+    return decode_core(params, cfg, token, caches, pos, enc_out=enc_out,
+                       fa_heads=fa_heads, duo_layers=duo_layers)
+
+
+def decode_many(params, cfg: ModelConfig, logits: jax.Array, caches: List,
+                pos: jax.Array, rng: jax.Array, *, n_steps: int,
+                greedy: bool = True, enc_out=None, fa_heads=None,
+                duo_layers: Optional[Tuple[int, ...]] = None,
+                unroll: int = 4):
+    """Fused generation: sample → decode for ``n_steps`` in one
+    ``lax.scan``, entirely on device.
+
+    logits (B,V): next-token logits from prefill (or a previous chunk);
+    pos ()/int32: absolute position of the first generated token; rng:
+    PRNG key (ignored when ``greedy``).  Under jit, mark ``n_steps``,
+    ``greedy`` and ``unroll`` static and donate ``caches`` so every
+    cache append is an in-place ``dynamic_update_slice`` on the
+    original buffers — no per-step host sync, no per-step cache copy.
+    ``unroll`` trades compile time for cross-step fusion inside the
+    scan (semantics are unchanged — same per-step graph, repeated).
+
+    Returns (tokens (B, n_steps) int32, last logits (B,V), caches).
+    Token i is sampled from the logits *before* decode step i, exactly
+    matching a per-step sample→decode python loop.
+    """
+    def step(carry, _):
+        logits, caches, pos, rng = carry
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            rng, k = jax.random.split(rng)
+            nxt = jax.random.categorical(k, logits).astype(jnp.int32)
+        logits, caches = decode_core(params, cfg, nxt[:, None], caches,
+                                     pos, enc_out=enc_out,
+                                     fa_heads=fa_heads,
+                                     duo_layers=duo_layers)
+        return (logits, caches, pos + 1, rng), nxt
+
+    (logits, caches, _, _), toks = lax.scan(
+        step, (logits, caches, jnp.asarray(pos, jnp.int32), rng),
+        length=n_steps, unroll=max(1, min(unroll, n_steps)))
+    return jnp.moveaxis(toks, 0, 1), logits, caches
 
 
 # ---------------------------------------------------------------------------

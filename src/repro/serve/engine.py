@@ -1,6 +1,6 @@
-"""Serving engine: prefill → route once → sparse decode (paper §3.3).
+"""Serving engine: prefill → route once → device-resident sparse decode.
 
-Flow:
+Flow (paper §3.3 + DESIGN.md §Serving):
   1. ``prefill`` runs the model over the prompt with *hard* routing; the
      Layer Router fires exactly once per layer and the decision is
      returned to the host.
@@ -8,17 +8,23 @@ Flow:
      decode caches the routing pattern dictates: FA layers keep the
      complete history, SA layers keep only the sink+local ring — the
      paper's KV-cache reduction, realized structurally.
-  3. ``decode_step`` jit-specializes on the routing pattern (a static
-     tuple); repeated patterns hit the jit cache.  Requests are bucketed
-     by (length, pattern).
+  3. ``decode_many`` generates all requested tokens in ONE compiled
+     call: a ``lax.scan`` over decode steps with on-device sampling,
+     donated cache buffers (every append is an in-place
+     ``dynamic_update_slice``), and tokens synced to host once at the
+     end.  The compiled executable is keyed by the *cache geometry*
+     (which full/ring buffer shapes exist), not by the fa/sa routing
+     tuple — patterns sharing a geometry share an executable, and
+     ``ServeEngine`` asserts the jit cache stays O(#geometries).
 
 ``sparse_decode=False`` reproduces the paper's non-shaded rows: routing
 affects prefill only and decode keeps full KV everywhere.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+import contextlib
+import warnings
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -38,7 +44,7 @@ from repro.serve import kv_cache as KC
 def _ring_src(seq_len: int, sink: int, local: int, ring: int) -> np.ndarray:
     """Per-ring-slot source position in the prefill KV (-1 = empty)."""
     src = np.full((ring,), -1, np.int64)
-    ns = min(sink, seq_len)
+    ns = min(sink, seq_len, ring)
     src[:ns] = np.arange(ns)
     for p in range(max(sink, seq_len - local), seq_len):
         src[sink + (p - sink) % local] = p
@@ -54,17 +60,17 @@ def _gather_ring(k_full: jax.Array, src: np.ndarray, axis: int) -> jax.Array:
     return jnp.where(mask, g, 0)
 
 
-def repack_caches(cfg: ModelConfig, prefill_caches, routing: Tuple[str, ...],
+def repack_caches(cfg: ModelConfig, prefill_caches, routing,
                   seq_len: int, max_len: int):
     """Prefill caches (stacked per period position) → decode cache list.
 
-    routing[i] ∈ {"fa","sa",None}; seq_len = prompt length (incl. any
-    modality prefix); max_len = decode cache capacity for FA layers.
+    routing[i] ∈ {"fa","sa",("duo",n),None}; seq_len = prompt length
+    (incl. any modality prefix); max_len = decode cache capacity for FA
+    layers.  Only "sa" changes the geometry (ring); duo layers keep the
+    full cache (ragged per-head histories are unrepresentable — §2.3).
     """
     flux = cfg.flux
     P = MD.period_len(cfg)
-    # map layer → (period, cache slot within period)
-    cache_positions = [pos for pos in range(P)]  # every kind yields a cache
     out = []
     for i, kind in enumerate(cfg.layer_kinds):
         per, pos = divmod(i, P)
@@ -75,10 +81,9 @@ def repack_caches(cfg: ModelConfig, prefill_caches, routing: Tuple[str, ...],
             continue
         if cfg.use_mla:
             ckv, kr = c  # (B,S,R), (B,1,S,rope)
-            B = ckv.shape[0]
             if kind == "attn" and routing[i] == "sa":
-                ring = min(flux.sink + flux.local, max_len)
-                src = _ring_src(seq_len, flux.sink, ring - flux.sink, ring)
+                ring, sink = KC.sa_ring(flux, max_len)
+                src = _ring_src(seq_len, sink, ring - sink, ring)
                 out.append(KC.RingLatentKV(
                     ckv=_gather_ring(ckv, src, 1),
                     kr=_gather_ring(kr, src, 2),
@@ -100,8 +105,8 @@ def repack_caches(cfg: ModelConfig, prefill_caches, routing: Tuple[str, ...],
                 positions=jnp.asarray(src, jnp.int32),
                 length=jnp.int32(seq_len)))
         elif kind == "attn" and routing[i] == "sa":
-            ring = min(flux.sink + flux.local, max_len)
-            src = _ring_src(seq_len, flux.sink, ring - flux.sink, ring)
+            ring, sink = KC.sa_ring(flux, max_len)
+            src = _ring_src(seq_len, sink, ring - sink, ring)
             out.append(KC.RingKV(
                 k=_gather_ring(k, src, 2), v=_gather_ring(v, src, 2),
                 positions=jnp.asarray(src, jnp.int32),
@@ -126,45 +131,68 @@ def kv_cache_bytes(caches) -> int:
 @dataclass
 class GenerationResult:
     tokens: np.ndarray            # (B, n_steps)
-    routing: Tuple[str, ...]      # per-layer decode pattern
+    routing: Tuple[Any, ...]      # per-layer decode pattern
     msr: float                    # SA fraction over routed layers
     kv_bytes: int                 # decode-cache footprint
     p_fa: Optional[np.ndarray] = None
+    dispatches: int = 0           # compiled calls issued for this request
 
 
 class ServeEngine:
     """Single-model serving with flux routing.
 
-    ``routing_override``: force a per-layer pattern (baselines/ablations)
-    instead of consulting the router.
+    ``routing_override``: force a per-layer pattern (baselines /
+    ablations) instead of consulting the router; entries may be "fa",
+    "sa", ("duo", n_fa_kv) or None.  ``generate`` also accepts a
+    per-request override.
+
+    Decode dispatch discipline: one ``decode_many`` scan per request
+    (``dispatch_count`` tracks compiled calls), one executable per
+    distinct (cache geometry, n_steps, sampling mode) — two routing
+    patterns with the same geometry reuse one executable, and
+    ``_check_executable_guard`` raises if a pattern-keyed recompile
+    ever sneaks back in.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_len: int = 4096,
-                 sparse_decode: bool = True, routing_override=None):
+                 sparse_decode: bool = True, routing_override=None,
+                 decode_attn=None, decode_unroll: int = 4):
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
         self.sparse_decode = sparse_decode
         self.routing_override = routing_override
+        self.decode_unroll = decode_unroll
+        # optional decode-attention backend (e.g. the Pallas flash-decode
+        # kernel via kernels.decode_attention.make_kernel_decode_attn);
+        # installed at trace time, baked into the compiled scan.
+        self.decode_attn = decode_attn
+        self.dispatch_count = 0           # compiled calls, engine lifetime
+        self._decode_keys: set = set()    # expected decode executables
         self._prefill = jax.jit(partial(MD.prefill, cfg=cfg),
                                 static_argnames=("routing_ctx",))
-        self._decode = jax.jit(partial(MD.decode_step, cfg=cfg),
-                               static_argnames=("routing",))
+        self._decode_many = jax.jit(
+            partial(MD.decode_many, cfg=cfg),
+            static_argnames=("n_steps", "greedy", "duo_layers", "unroll"),
+            donate_argnames=("caches",))
         self._encode = (jax.jit(partial(MD.encode, cfg=cfg))
                         if cfg.num_encoder_layers else None)
 
     # -- routing pattern ---------------------------------------------------
-    def _pattern(self, decisions: Optional[np.ndarray]) -> Tuple[str, ...]:
+    def _pattern(self, decisions: Optional[np.ndarray],
+                 override=None) -> Tuple[Any, ...]:
         cfg = self.cfg
+        override = override if override is not None else \
+            self.routing_override
         routed = list(cfg.routable_layers())
-        pattern: List[Optional[str]] = [None] * cfg.num_layers
+        pattern: List[Any] = [None] * cfg.num_layers
         for i, kind in enumerate(cfg.layer_kinds):
             if kind != "attn":
                 continue
             if not cfg.flux.enabled:
                 pattern[i] = "fa"
-            elif self.routing_override is not None:
-                pattern[i] = self.routing_override[i]
+            elif override is not None:
+                pattern[i] = override[i]
             elif decisions is None or not self.sparse_decode:
                 pattern[i] = "fa"
             else:
@@ -172,52 +200,86 @@ class ServeEngine:
                 pattern[i] = "fa" if int(decisions[j]) else "sa"
         return tuple(pattern)
 
+    # -- jit-cache bookkeeping ---------------------------------------------
+    def decode_cache_size(self) -> int:
+        """Number of compiled decode executables held by this engine."""
+        return self._decode_many._cache_size()
+
+    def _check_executable_guard(self) -> None:
+        """The decode jit cache must stay O(#geometries) — one entry per
+        (cache geometry, n_steps, greedy) actually served — never
+        O(2^routable_layers) pattern-keyed entries."""
+        compiled, expected = self.decode_cache_size(), len(self._decode_keys)
+        if compiled > expected:
+            raise RuntimeError(
+                f"decode executable explosion: {compiled} compiled for "
+                f"{expected} (geometry, n_steps, sampling) keys — a "
+                f"routing-pattern-static argument has leaked into the "
+                f"decode jit signature")
+
     # -- API -----------------------------------------------------------------
     def generate(self, tokens: np.ndarray, n_steps: int, *,
                  prefix_embeddings=None, encoder_frames=None,
-                 greedy: bool = True, rng=None) -> GenerationResult:
+                 greedy: bool = True, rng=None,
+                 routing_override=None) -> GenerationResult:
         cfg = self.cfg
         tokens = jnp.asarray(tokens)
         B, S = tokens.shape
-        enc_out = (self._encode(params=self.params, frames=encoder_frames)
-                   if self._encode is not None else None)
+        dispatches = 0
+        enc_out = None
+        if self._encode is not None:
+            enc_out = self._encode(params=self.params, frames=encoder_frames)
+            dispatches += 1
+        override = (routing_override if routing_override is not None
+                    else self.routing_override)
         routing_ctx = "hard" if (cfg.flux.enabled
-                                 and self.routing_override is None
+                                 and override is None
                                  and cfg.routable_layers()) else "fa_only"
         pf = self._prefill(params=self.params, tokens=tokens,
                            routing_ctx=routing_ctx,
                            prefix_embeddings=prefix_embeddings,
                            encoder_frames=encoder_frames)
+        dispatches += 1
         decisions = (np.asarray(pf.routing)
                      if pf.routing is not None else None)
-        pattern = self._pattern(decisions)
+        pattern = self._pattern(decisions, override)
         seq_len = S + (prefix_embeddings.shape[1]
                        if prefix_embeddings is not None else 0)
         caches = repack_caches(cfg, pf.caches, pattern, seq_len,
                                self.max_len)
         kv_bytes = kv_cache_bytes(caches)
 
-        logits = pf.logits
-        out_tokens = []
-        pos = seq_len
-        for step in range(n_steps):
-            if greedy or rng is None:
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            else:
-                rng, k = jax.random.split(rng)
-                nxt = jax.random.categorical(k, logits).astype(jnp.int32)
-            out_tokens.append(np.asarray(nxt))
-            logits, caches = self._decode(
-                params=self.params, token=nxt[:, None], caches=caches,
-                routing=pattern, pos=jnp.int32(pos), enc_out=enc_out)
-            pos += 1
+        greedy = bool(greedy or rng is None)
+        rng = rng if rng is not None else jax.random.key(0)
+        fa_heads, duo_layers = MD.routing_head_split(cfg, pattern)
+        def _sig(a):  # traced-arg structure that keys a jit entry
+            return (None if a is None
+                    else (tuple(a.shape), str(a.dtype)))
+        self._decode_keys.add((KC.cache_geometry(caches), n_steps, greedy,
+                               duo_layers, _sig(enc_out), _sig(rng)))
+        attn_ctx = (MD.use_decode_attn(self.decode_attn)
+                    if self.decode_attn is not None
+                    else contextlib.nullcontext())
+        with warnings.catch_warnings(), attn_ctx:
+            # donation is a no-op on backends without buffer aliasing
+            # (CPU tests) — harmless, silence the per-call warning
+            warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+            toks, _, _ = self._decode_many(
+                params=self.params, logits=pf.logits, caches=caches,
+                pos=jnp.int32(seq_len), rng=rng, n_steps=n_steps,
+                greedy=greedy, enc_out=enc_out, fa_heads=fa_heads,
+                duo_layers=duo_layers, unroll=self.decode_unroll)
+        dispatches += 1
+        self.dispatch_count += dispatches
+        self._check_executable_guard()
         routed = [p for p in pattern if p is not None]
         msr_val = (sum(p == "sa" for p in routed) / len(routed)
                    if routed else float("nan"))
         return GenerationResult(
-            tokens=np.stack(out_tokens, axis=1), routing=pattern,
+            tokens=np.asarray(toks), routing=pattern,
             msr=msr_val, kv_bytes=kv_bytes,
-            p_fa=None if pf.p_fa is None else np.asarray(pf.p_fa))
+            p_fa=None if pf.p_fa is None else np.asarray(pf.p_fa),
+            dispatches=dispatches)
 
 
 # ---------------------------------------------------------------------------

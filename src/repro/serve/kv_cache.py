@@ -127,8 +127,38 @@ def latent_insert(cache: LatentKV, ckv_new: jax.Array, kr_new: jax.Array,
 # Construction
 # ---------------------------------------------------------------------------
 
+def cache_geometry(caches) -> Tuple:
+    """Hashable per-layer geometry signature of a decode-cache list.
+
+    Two routing patterns compile to the same decode executable iff
+    their signatures match — the signature is exactly the static axis
+    of the jitted decode step (cache pytree structure + buffer
+    shapes/dtypes), which is what the engine's executable-count guard
+    keys on (DESIGN.md §Serving).
+    """
+    sig = []
+    for c in caches:
+        leaves = jax.tree.leaves(c)
+        sig.append((type(c).__name__,)
+                   + tuple((tuple(a.shape), str(a.dtype)) for a in leaves))
+    return tuple(sig)
+
+
 def ring_size(flux: FluxConfig) -> int:
     return flux.sink + flux.local
+
+
+def sa_ring(flux: FluxConfig, max_len: int) -> Tuple[int, int]:
+    """(ring, sink) geometry of an SA decode cache under a ``max_len``
+    capacity cap.  The ring must keep at least one local slot beyond
+    the sink or decode's ``pos % local`` ring arithmetic degenerates
+    to a modulo-by-zero."""
+    ring = min(ring_size(flux), max_len)
+    if ring <= flux.sink:
+        raise ValueError(
+            f"max_len={max_len} leaves no local slots beyond the "
+            f"sink ({flux.sink}); raise max_len or shrink flux.sink")
+    return ring, flux.sink
 
 
 def init_layer_cache(cfg: ModelConfig, kind: str, mode: str, batch: int,
@@ -157,7 +187,7 @@ def init_layer_cache(cfg: ModelConfig, kind: str, mode: str, batch: int,
     # attn layer
     if cfg.use_mla:
         if mode == "sa":
-            L = min(ring_size(flux), max_len)
+            L, _ = sa_ring(flux, max_len)
             return RingLatentKV(
                 ckv=jnp.zeros((batch, L, cfg.kv_lora_rank), dtype),
                 kr=jnp.zeros((batch, 1, L, cfg.qk_rope_head_dim), dtype),
@@ -168,7 +198,7 @@ def init_layer_cache(cfg: ModelConfig, kind: str, mode: str, batch: int,
             kr=jnp.zeros((batch, 1, max_len, cfg.qk_rope_head_dim), dtype),
             length=jnp.zeros((), jnp.int32))
     if mode == "sa":
-        L = min(ring_size(flux), max_len)
+        L, _ = sa_ring(flux, max_len)
         return RingKV(
             k=jnp.zeros((batch, cfg.num_kv_heads, L, cfg.head_dim), dtype),
             v=jnp.zeros((batch, cfg.num_kv_heads, L, cfg.head_dim), dtype),

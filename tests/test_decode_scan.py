@@ -1,0 +1,151 @@
+"""Device-resident decode loop (DESIGN.md §Serving).
+
+Covers the serving acceptance invariants: the scanned generator is
+bitwise-identical to a per-step sample→decode python loop; a request
+costs O(1) compiled dispatches, not O(n_steps); the decode jit cache is
+keyed by cache geometry, so routing patterns sharing a geometry share
+one executable; and the Pallas flash-decode kernel adapter matches the
+dense decode dot.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.kernels.decode_attention import make_kernel_decode_attn
+from repro.models import model as MD
+from repro.serve import ServeEngine, repack_caches
+
+B, S, N = 2, 24, 5
+
+
+def _setup(arch, **replace):
+    cfg = smoke_variant(get_config(arch))
+    if replace:
+        cfg = cfg.replace(**replace)
+    params = MD.init_params(jax.random.key(0), cfg)
+    toks = np.asarray(jax.random.randint(jax.random.key(1), (B, S), 0,
+                                         cfg.vocab_size))
+    return cfg, params, toks
+
+
+def _loop_generate(eng, cfg, params, toks, n_steps, *, greedy=True,
+                   rng=None):
+    """The seed's per-step host loop: sample on device, sync the token,
+    dispatch one decode jit per step.  Reference for bitwise equality
+    with the fused scan."""
+    pf = eng._prefill(params=params, tokens=jnp.asarray(toks),
+                      routing_ctx="hard", prefix_embeddings=None,
+                      encoder_frames=None)
+    decisions = np.asarray(pf.routing) if pf.routing is not None else None
+    pattern = eng._pattern(decisions)
+    caches = repack_caches(cfg, pf.caches, pattern, S, eng.max_len)
+    logits = pf.logits
+    out, pos = [], S
+    for _ in range(n_steps):
+        if greedy or rng is None:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            rng, k = jax.random.split(rng)
+            nxt = jax.random.categorical(k, logits).astype(jnp.int32)
+        out.append(np.asarray(nxt))
+        logits, caches = MD.decode_step(params, cfg, nxt[:, None], caches,
+                                        pattern, jnp.int32(pos))
+        pos += 1
+    return np.stack(out, axis=1)
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "jamba-1.5-large-398b",
+                                  "deepseek-v2-236b"])
+def test_scan_generate_bitwise_matches_step_loop(arch):
+    cfg, params, toks = _setup(arch)
+    eng = ServeEngine(params, cfg, max_len=S + N + 3)
+    gen = eng.generate(toks, N)
+    ref = _loop_generate(eng, cfg, params, toks, N)
+    assert np.array_equal(gen.tokens, ref)
+
+
+def test_scan_generate_sampling_matches_step_loop():
+    cfg, params, toks = _setup("phi3-mini-3.8b")
+    eng = ServeEngine(params, cfg, max_len=S + N + 3)
+    rng = jax.random.key(7)
+    gen = eng.generate(toks, N, greedy=False, rng=rng)
+    ref = _loop_generate(eng, cfg, params, toks, N, greedy=False, rng=rng)
+    assert np.array_equal(gen.tokens, ref)
+
+
+def test_generate_is_constant_dispatch():
+    """O(1) compiled calls per request regardless of n_steps."""
+    cfg, params, toks = _setup("phi3-mini-3.8b")
+    eng = ServeEngine(params, cfg, max_len=S + 34)
+    before = eng.dispatch_count
+    gen_short = eng.generate(toks, 2)
+    mid = eng.dispatch_count
+    gen_long = eng.generate(toks, 32)
+    after = eng.dispatch_count
+    assert gen_short.dispatches == gen_long.dispatches == 2
+    assert mid - before == after - mid == 2  # prefill + one decode scan
+
+
+def test_same_geometry_patterns_share_one_executable():
+    """Different routing patterns with identical cache geometry (all
+    full KV, differing only in the traced head-split) must hit one
+    compiled decode executable."""
+    cfg, params, toks = _setup("phi3-mini-3.8b")
+    eng = ServeEngine(params, cfg, max_len=S + N + 3)
+    duo1 = tuple(("duo", 1) if k == "attn" else None
+                 for k in cfg.layer_kinds)
+    duo2 = tuple(("duo", 2) if k == "attn" else None
+                 for k in cfg.layer_kinds)
+    t1 = eng.generate(toks, N, routing_override=duo1)
+    size1 = eng.decode_cache_size()
+    t2 = eng.generate(toks, N, routing_override=duo2)
+    size2 = eng.decode_cache_size()
+    assert size1 == size2 == 1
+    assert t1.routing != t2.routing  # genuinely different patterns
+
+
+def test_executable_count_stays_per_geometry():
+    """The jit cache grows only when the geometry (or n_steps bucket)
+    changes — never per routing pattern."""
+    cfg, params, toks = _setup("phi3-mini-3.8b")
+    eng = ServeEngine(params, cfg, max_len=S + N + 3)
+    fa = tuple("fa" if k == "attn" else None for k in cfg.layer_kinds)
+    sa = tuple("sa" if k == "attn" else None for k in cfg.layer_kinds)
+    eng.generate(toks, N, routing_override=fa)
+    assert eng.decode_cache_size() == 1
+    eng.generate(toks, N, routing_override=sa)   # new geometry → +1
+    assert eng.decode_cache_size() == 2
+    eng.generate(toks, N, routing_override=sa)   # repeat → reuse
+    assert eng.decode_cache_size() == 2
+    eng._check_executable_guard()
+
+
+def test_kernel_decode_adapter_matches_dense():
+    rng = np.random.default_rng(0)
+    B_, Hq, Hkv, L, D = 2, 4, 2, 64, 16
+    q = jnp.asarray(rng.normal(size=(B_, Hq, 1, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B_, Hkv, L, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B_, Hkv, L, D)), jnp.float32)
+    valid = jnp.arange(L) <= 40
+    fn = make_kernel_decode_attn(block_k=16, min_len=16, interpret=True)
+    out = fn(q, k, v, valid)
+    ref = MD._dot_decode(q, k, v, valid)
+    assert float(jnp.abs(out - ref).max()) < 2e-5
+    # declines per-head masks and short caches
+    assert fn(q, k, v, jnp.stack([valid, valid])) is None
+    assert make_kernel_decode_attn(min_len=128)(
+        q, k, v, valid) is None
+
+
+def test_engine_with_kernel_decode_backend():
+    cfg, params, toks = _setup("phi3-mini-3.8b")
+    eng_ref = ServeEngine(params, cfg, max_len=S + N + 3)
+    eng_krn = ServeEngine(params, cfg, max_len=S + N + 3,
+                          decode_attn=make_kernel_decode_attn(
+                              block_k=16, min_len=16, interpret=True))
+    ref = eng_ref.generate(toks, N)
+    out = eng_krn.generate(toks, N)
+    assert out.tokens.shape == ref.tokens.shape
+    assert np.array_equal(out.tokens, ref.tokens)

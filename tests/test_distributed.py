@@ -20,8 +20,9 @@ def test_lse_combine_matches_local():
     v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
     valid = jnp.arange(S) <= 40
     mesh = make_debug_mesh(1, 1)
-    with jax.set_mesh(mesh):
-        out = lse_combine_decode(q, k, v, valid, mesh, ("data",))
+    # the mesh is passed explicitly (shard_map mesh=...) — no ambient
+    # jax.set_mesh needed, which also keeps jax 0.4.x compatibility
+    out = lse_combine_decode(q, k, v, valid, mesh, ("data",))
     ref = MD._dot_decode(q, k, v, valid)
     assert float(jnp.abs(out - ref).max()) < 2e-5
 

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev dep (pyproject [dev]); skip, never break collection
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

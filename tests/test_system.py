@@ -36,9 +36,11 @@ def trained():
     params = MD.init_params(jax.random.key(0), cfg)
     it = mixture_iterator(cfg.vocab_size, 16, SEQ, seed=0,
                           weights={"markov": 0.5, "needle": 0.5})
-    pt = PretrainTrainer(cfg, total_steps=400, lr=3e-3)
+    # 1000 steps: enough for induction to form under this jax/backend's
+    # numerics (400 left needle accuracy at chance-adjacent 0.25)
+    pt = PretrainTrainer(cfg, total_steps=1000, lr=3e-3)
     st = pt.init(params)
-    st, _ = pt.run(st, it, 400, log_every=1000, log_fn=lambda *_: None)
+    st, _ = pt.run(st, it, 1000, log_every=10000, log_fn=lambda *_: None)
     params = st["params"]
     rt = RouterTrainer(cfg, total_steps=80)
     rstate = rt.init(params)
