@@ -1,0 +1,212 @@
+"""Continuous batching vs batch-synchronous serving (DESIGN.md §Scheduler).
+
+Mixed-length Poisson traffic against the two frontends of the same
+engine:
+
+  serve_batch — buckets requests by exact (length, n_steps), waits for
+      the full arrival window, runs each bucket to completion.  A
+      request's first token only exists when its whole bucket's fused
+      decode scan returns.
+  ContinuousScheduler — slot-pool decode; requests join a persistent
+      batch at the next tick after arrival and stream out per chunk.
+
+Reports token throughput (busy tok/s) and p50/p95 TTFT for both, and
+writes ``BENCH_serving.json`` for the perf trajectory.  The acceptance
+bar for this subsystem is ≥1.5× throughput on the mixed-length
+workload (continuous batching merges the per-length buckets into one
+resident decode batch, amortizing per-step dispatch across requests).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+
+from benchmarks.common import CACHE_DIR, Row, bench_cfg
+from repro.models import model as MD
+from repro.serve import ContinuousScheduler, Request, ServeEngine
+
+# all-distinct prompt lengths: the mixed-traffic shape the subsystem
+# exists for — real traffic rarely collides on exact length, so
+# exact-length bucketing degenerates to B=1 buckets that serialize,
+# while the slot pool still decodes everything as one batch
+LENS = tuple(range(24, 88, 4))  # 16 unique lengths
+
+
+def _requests(cfg, n: int, n_steps: int, seed: int = 0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=LENS[i % len(LENS)]
+                                        ).astype(np.int32),
+                    n_steps=n_steps)
+            for i in range(n)]
+
+
+def _arrivals(n: int, mean_gap_s: float, seed: int = 1) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(mean_gap_s, size=n))
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def _run_batch(eng: ServeEngine, reqs: List[Request],
+               arrivals: np.ndarray) -> Dict:
+    """serve_batch semantics with per-bucket timing: serving starts once
+    every request has arrived; a request's TTFT is its bucket's
+    completion (the fused scan yields no earlier tokens)."""
+    buckets: Dict[tuple, List[int]] = {}
+    for i, r in enumerate(reqs):
+        buckets.setdefault((len(r.tokens), r.n_steps), []).append(i)
+    t = float(arrivals.max())  # batch frontend waits for stragglers
+    busy = 0.0
+    ttft, tokens = [], 0
+    for (_, n_steps), idxs in buckets.items():
+        toks = np.stack([reqs[i].tokens for i in idxs])
+        t0 = time.perf_counter()
+        gen = eng.generate(toks, n_steps)  # tokens land on host here
+        dt = time.perf_counter() - t0
+        busy += dt
+        t += dt
+        tokens += gen.tokens.size
+        ttft.extend(t - arrivals[i] for i in idxs)
+    return {"tokens": tokens, "busy_s": busy,
+            "tokens_per_sec": tokens / busy,
+            "ttft_p50_s": _pct(ttft, 50), "ttft_p95_s": _pct(ttft, 95)}
+
+
+def _run_continuous(eng: ServeEngine, reqs: List[Request],
+                    arrivals: np.ndarray, *, slots: int,
+                    chunk: int) -> Dict:
+    """Submit on the (wall-clock) Poisson schedule, tick until drained."""
+    sched = ContinuousScheduler(eng, slots_per_bucket=slots, chunk=chunk)
+    t0 = time.perf_counter()
+    pending = sorted(range(len(reqs)), key=lambda i: arrivals[i])
+    submitted_at = {}
+    done = {}
+    while len(done) < len(reqs):
+        now = time.perf_counter() - t0
+        while pending and arrivals[pending[0]] <= now:
+            i = pending.pop(0)
+            sched.submit(reqs[i])
+            submitted_at[reqs[i].rid] = now
+        if sched.n_active() or sched.waiting:
+            for f in sched.tick():
+                done[f.rid] = f
+        elif pending:  # idle until the next Poisson arrival
+            time.sleep(min(max(arrivals[pending[0]] - now, 0.0), 0.005))
+    busy = time.perf_counter() - t0
+    tokens = sum(f.metrics.n_generated for f in done.values())
+    ttft = [f.metrics.ttft for f in done.values()]
+    qd = [f.metrics.queue_delay for f in done.values()]
+    return {"tokens": tokens, "busy_s": busy,
+            "tokens_per_sec": tokens / busy,
+            "ttft_p50_s": _pct(ttft, 50), "ttft_p95_s": _pct(ttft, 95),
+            "queue_delay_p50_s": _pct(qd, 50),
+            "geometries": sched.n_geometries(),
+            "decode_executables": eng.decode_cache_size(),
+            "ticks": sched.ticks}
+
+
+def _mixed_pattern(cfg):
+    flip, out = True, []
+    for k in cfg.layer_kinds:
+        out.append(("fa" if flip else "sa") if k == "attn" else None)
+        flip = not flip if k == "attn" else flip
+    return tuple(out)
+
+
+def run(n_requests: int = 16, n_steps: int = 128, slots: int = 16,
+        chunk: int = 8, mean_gap_s: float = 0.005) -> List[Row]:
+    cfg = bench_cfg()
+    params = MD.init_params(jax.random.key(0), cfg)
+    reqs = _requests(cfg, n_requests, n_steps)
+    arrivals = _arrivals(n_requests, mean_gap_s)
+    max_len = max(LENS) + n_steps + 2
+
+    # pin one realistic FA/SA mix on both paths: the bench isolates the
+    # *scheduling* transformation (bucketed run-to-completion vs slot
+    # pool); an untrained router would scatter requests over arbitrary
+    # geometries and measure router noise instead.  Multi-geometry
+    # admission is covered by tests/test_continuous_batching.py.
+    pattern = _mixed_pattern(cfg)
+    # separate engines (separate jit caches) — warm each path once on
+    # the full workload so compile time stays out of the timings, then
+    # keep the best of ``reps`` interleaved measurements per path (the
+    # host's available CPU throughput drifts by integer factors between
+    # runs; min-time is the standard estimator under such contamination)
+    reps = 3
+    eng_b = ServeEngine(params, cfg, max_len=max_len,
+                        routing_override=pattern)
+    eng_c = ServeEngine(params, cfg, max_len=max_len,
+                        routing_override=pattern)
+    _run_batch(eng_b, reqs, arrivals)
+    _run_continuous(eng_c, reqs, arrivals, slots=slots, chunk=chunk)
+    batch = cont = None
+    for _ in range(reps):
+        b = _run_batch(eng_b, reqs, arrivals)
+        c = _run_continuous(eng_c, reqs, arrivals, slots=slots,
+                            chunk=chunk)
+        if batch is None or b["tokens_per_sec"] > batch["tokens_per_sec"]:
+            batch = b
+        if cont is None or c["tokens_per_sec"] > cont["tokens_per_sec"]:
+            cont = c
+
+    speedup = cont["tokens_per_sec"] / batch["tokens_per_sec"]
+    results = {
+        "n_requests": n_requests, "n_steps": n_steps,
+        "prompt_lens": list(LENS), "slots_per_bucket": slots,
+        "chunk": chunk, "mean_arrival_gap_s": mean_gap_s,
+        "serve_batch": batch, "continuous": cont,
+        "throughput_speedup": speedup,
+    }
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    with open(os.path.join(CACHE_DIR, "BENCH_serving.json"), "w") as f:
+        json.dump({"timestamp": time.time(),
+                   "device": jax.default_backend(),
+                   "results": results}, f, indent=2)
+    rows = [
+        Row("continuous-batching/serve_batch", batch["busy_s"] * 1e6,
+            f"tps={batch['tokens_per_sec']:.0f};"
+            f"ttft_p50={batch['ttft_p50_s'] * 1e3:.0f}ms;"
+            f"ttft_p95={batch['ttft_p95_s'] * 1e3:.0f}ms"),
+        Row("continuous-batching/slot-pool", cont["busy_s"] * 1e6,
+            f"tps={cont['tokens_per_sec']:.0f};"
+            f"ttft_p50={cont['ttft_p50_s'] * 1e3:.0f}ms;"
+            f"ttft_p95={cont['ttft_p95_s'] * 1e3:.0f}ms;"
+            f"speedup={speedup:.2f}x;"
+            f"geoms={cont['geometries']};"
+            f"execs={cont['decode_executables']}"),
+    ]
+    return rows
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    rows = (run(n_requests=6, n_steps=8, slots=4, chunk=4)
+            if smoke else run())
+    for r in rows:
+        print(r.csv())
+    data = json.load(open(os.path.join(CACHE_DIR, "BENCH_serving.json")))
+    speedup = data["results"]["throughput_speedup"]
+    # correctness is gated in tests; the throughput ratio is advisory on
+    # shared/smoke runners but the full run should clear 1.5×
+    if speedup < 1.5:
+        print(f"# WARN continuous-batching speedup {speedup:.2f}x < 1.5x"
+              + (" (smoke shapes — advisory)" if smoke else ""))
+    else:
+        print(f"# ok continuous-batching speedup {speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

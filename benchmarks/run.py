@@ -9,11 +9,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks import (bench_continued_training,  # noqa: E402
-                        bench_data_balance, bench_decode_speedup,
-                        bench_head_vs_layer, bench_longbench_proxy,
-                        bench_prefill_speedup, bench_router_overhead,
-                        bench_ruler_proxy, bench_sparsity_sweep,
-                        bench_target_sparsity, roofline)
+                        bench_continuous_batching, bench_data_balance,
+                        bench_decode_speedup, bench_head_vs_layer,
+                        bench_longbench_proxy, bench_prefill_speedup,
+                        bench_router_overhead, bench_ruler_proxy,
+                        bench_sparsity_sweep, bench_target_sparsity,
+                        roofline)
 
 BENCHES = [
     ("Table1/LongBench-E", bench_longbench_proxy),
@@ -26,6 +27,7 @@ BENCHES = [
     ("Fig7/data-balance", bench_data_balance),
     ("Fig9/router-overhead", bench_router_overhead),
     ("Serving/decode-speedup", bench_decode_speedup),
+    ("Serving/continuous-batching", bench_continuous_batching),
     ("Roofline", roofline),
 ]
 

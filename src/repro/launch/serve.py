@@ -1,7 +1,11 @@
-"""Serving launcher: batched requests through the flux engine.
+"""Serving launcher: batched or continuous requests through the engine.
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch phi3-mini-3.8b --smoke --requests 4 --prompt-len 128
+
+    # continuous batching: Poisson arrivals into the slot-pool scheduler
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch phi3-mini-3.8b --smoke --continuous --requests 8
 """
 from __future__ import annotations
 
@@ -18,6 +22,54 @@ from repro.serve import Request, ServeEngine, serve_batch
 from repro.train import checkpoint
 
 
+def _requests(cfg, args) -> list:
+    gen = SyntheticTasks(cfg.vocab_size, seed=0)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for rid in range(args.requests):
+        task = "needle" if rid % 2 == 0 else "markov"
+        # continuous mode mixes prompt lengths — the traffic shape the
+        # slot-pool scheduler exists for
+        plen = (args.prompt_len if not args.continuous
+                else args.prompt_len // (1 + rid % 3))
+        b = gen.batch(rng, task, 1, max(plen, 16))
+        reqs.append(Request(rid=rid, tokens=b.tokens[0],
+                            n_steps=args.gen_len))
+    return reqs
+
+
+def _serve_continuous(engine: ServeEngine, reqs, args) -> None:
+    sched = engine.scheduler(slots_per_bucket=args.slots, chunk=args.chunk)
+    rng = np.random.default_rng(1)
+    arrivals = np.cumsum(rng.exponential(args.mean_gap, len(reqs)))
+    t0 = time.monotonic()
+    pending = list(reqs)
+    next_arrival = 0
+    done = {}
+    while len(done) < len(reqs):
+        now = time.monotonic() - t0
+        while pending and arrivals[next_arrival] <= now:
+            engine.submit(pending.pop(0))
+            next_arrival += 1
+        if sched.waiting or sched.n_active():
+            for f in engine.step():
+                done[f.rid] = f
+        elif pending:  # idle until the next Poisson arrival
+            time.sleep(min(max(arrivals[next_arrival] - now, 0.0), 0.05))
+    wall = time.monotonic() - t0
+    total = 0
+    for rid in sorted(done):
+        f, m = done[rid], done[rid].metrics
+        total += m.n_generated
+        print(f"req {rid}: {f.tokens[:8].tolist()} ... | "
+              f"ttft={m.ttft * 1e3:6.1f}ms queue={m.queue_delay * 1e3:5.1f}ms "
+              f"tps={m.decode_tps:6.1f} preempt={m.preemptions}")
+    print(f"{len(done)} requests | {total} tokens in {wall:.2f}s "
+          f"({total / wall:.0f} tok/s) | geometries={sched.n_geometries()} "
+          f"decode_executables={engine.decode_cache_size()} "
+          f"ticks={sched.ticks}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ALL_ARCHS, required=True)
@@ -28,6 +80,15 @@ def main() -> None:
     ap.add_argument("--load", default=None)
     ap.add_argument("--dense", action="store_true",
                     help="disable sparse decode (paper's non-shaded rows)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-pool continuous batching instead of "
+                         "batch-synchronous bucketing")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="slot-pool capacity per geometry bucket")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps per scheduler tick")
+    ap.add_argument("--mean-gap", type=float, default=0.02,
+                    help="mean Poisson interarrival gap (s)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -37,18 +98,13 @@ def main() -> None:
     if args.load:
         params = checkpoint.load(args.load, params)
 
-    gen = SyntheticTasks(cfg.vocab_size, seed=0)
-    rng = np.random.default_rng(0)
-    reqs = []
-    for rid in range(args.requests):
-        task = "needle" if rid % 2 == 0 else "markov"
-        b = gen.batch(rng, task, 1, args.prompt_len)
-        reqs.append(Request(rid=rid, tokens=b.tokens[0],
-                            n_steps=args.gen_len))
-
+    reqs = _requests(cfg, args)
     engine = ServeEngine(params, cfg,
                          max_len=args.prompt_len + args.gen_len + 8,
                          sparse_decode=not args.dense)
+    if args.continuous:
+        _serve_continuous(engine, reqs, args)
+        return
     t0 = time.time()
     results = serve_batch(engine, reqs)
     dt = time.time() - t0

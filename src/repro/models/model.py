@@ -495,36 +495,65 @@ def layer_params(params, cfg: ModelConfig, layer_idx: int):
     return jax.tree.map(lambda a: a[per], params["trunk"][pos])
 
 
+def _rope_positions(pos: jax.Array) -> jax.Array:
+    """Decode-step RoPE positions: (1,) shared when ``pos`` is scalar,
+    (B, 1) per-slot when ``pos`` is (B,) — ``apply_rope`` broadcasts
+    either against the length-1 sequence axis."""
+    return pos[None] if jnp.ndim(pos) == 0 else pos[:, None]
+
+
+def _causal_valid(L: int, pos: jax.Array, batch: int) -> jax.Array:
+    """(B, L) per-row causal mask over a full cache (slots ≤ pos)."""
+    idx = jnp.arange(L)
+    if jnp.ndim(pos) == 0:
+        return jnp.broadcast_to(idx <= pos, (batch, L))
+    return idx[None, :] <= pos[:, None]
+
+
 def _decode_attn_full(bp, cfg, x, pos, cache: KC.FullKV):
-    positions = pos[None]
+    positions = _rope_positions(pos)
     if cfg.use_mla:
         ckv, kr = A.mla_latent(bp["attn"], cfg, x, positions)
         cache = KC.latent_insert(cache, ckv, kr, pos)
-        valid = jnp.arange(cache.ckv.shape[1]) <= pos
+        valid = _causal_valid(cache.ckv.shape[1], pos, x.shape[0])
         y = A.mla_absorbed_decode(bp["attn"], cfg, x, positions,
-                                  cache.ckv, cache.kr, valid[None].repeat(
-                                      x.shape[0], 0))
+                                  cache.ckv, cache.kr, valid)
         return y, cache
     q, k, v, _ = A.gqa_qkv(bp["attn"], cfg, x, positions)
     cache = _full_kv_insert(cache, k, v, pos)
-    valid = jnp.arange(cache.k.shape[2]) <= pos  # (Smax,)
+    if jnp.ndim(pos) == 0:
+        # uniform positions → 1-D mask, eligible for the kernel /
+        # distributed decode overrides
+        valid = jnp.arange(cache.k.shape[2]) <= pos  # (Smax,)
+    else:
+        # per-slot positions → (B, 1, Smax) per-row mask
+        valid = _causal_valid(cache.k.shape[2], pos, x.shape[0])[:, None]
     o = _dot_decode(q, cache.k, cache.v, valid)
     return A.gqa_out(bp["attn"], cfg, o), cache
 
 
 def _decode_attn_ring(bp, cfg, x, pos, cache, sink: int, local: int):
-    positions = pos[None]
+    positions = _rope_positions(pos)
+    pos_col = pos if jnp.ndim(pos) == 0 else pos[:, None]
     if cfg.use_mla:
         ckv, kr = A.mla_latent(bp["attn"], cfg, x, positions)
         cache = KC.ring_latent_insert(cache, ckv, kr, pos, sink, local)
-        valid = (cache.positions >= 0) & (cache.positions <= pos)
+        valid = (cache.positions >= 0) & (cache.positions <= pos_col)
         y = A.mla_absorbed_decode(bp["attn"], cfg, x, positions, cache.ckv,
-                                  cache.kr,
-                                  valid[None].repeat(x.shape[0], 0))
+                                  cache.kr, valid)
         return y, cache
     q, k, v, _ = A.gqa_qkv(bp["attn"], cfg, x, positions)
     cache = KC.ring_insert(cache, k, v, pos, sink, local)
-    valid = (cache.positions >= 0) & (cache.positions <= pos)
+    if jnp.ndim(pos) == 0:
+        # uniform positions keep every row of cache.positions identical
+        # (repack + scalar-pos inserts), so a 1-D mask is exact — and
+        # keeps ring layers eligible for the kernel/distributed
+        # decode-attention overrides
+        valid = (cache.positions[0] >= 0) & (cache.positions[0] <= pos)
+    else:
+        # per-slot (B, ring) bookkeeping → (B, 1, ring) per-row mask
+        valid = ((cache.positions >= 0)
+                 & (cache.positions <= pos_col))[:, None]
     o = _dot_decode(q, cache.k, cache.v, valid)
     return A.gqa_out(bp["attn"], cfg, o), cache
 
@@ -558,16 +587,25 @@ def use_cache_insert(fn):
 
 
 def _full_kv_insert(cache: KC.FullKV, k_new, v_new, pos) -> KC.FullKV:
-    if _CACHE_INSERT_OVERRIDE:
+    # the distributed sharded insert handles uniform (scalar) positions
+    # only; per-slot inserts stay on the local scatter path
+    if _CACHE_INSERT_OVERRIDE and jnp.ndim(pos) == 0:
         out = _CACHE_INSERT_OVERRIDE[-1](cache.k, cache.v, k_new, v_new,
                                          pos)
         if out is not None:
-            return KC.FullKV(k=out[0], v=out[1], length=pos + 1)
+            return KC.FullKV(k=out[0], v=out[1],
+                             length=jnp.broadcast_to(
+                                 pos + 1, cache.length.shape).astype(
+                                     cache.length.dtype))
     return KC.full_insert(cache, k_new, v_new, pos)
 
 
 def _dot_decode(q, k, v, valid):
-    """q (B,H,1,D), k/v (B,Hkv,L,D), valid (L,) or (Hkv,L) → (B,H,1,D)."""
+    """q (B,H,1,D), k/v (B,Hkv,L,D) → (B,H,1,D).
+
+    valid is (L,) shared, (Hkv,L) per-kv-head (head-split baselines),
+    or (B,Hkv_or_1,L) per-row (continuous-batching slot pools, where
+    every row is a different request at its own position)."""
     if _DECODE_ATTN_OVERRIDE and valid.ndim == 1:
         out = _DECODE_ATTN_OVERRIDE[-1](q, k, v, valid)
         if out is not None:  # override may decline (e.g. small ring)
@@ -579,8 +617,10 @@ def _dot_decode(q, k, v, valid):
                    preferred_element_type=jnp.float32) * D ** -0.5
     if valid.ndim == 1:
         vmask = valid[None, None, None, None, :]
-    else:  # per-kv-head mask (head-split baselines)
+    elif valid.ndim == 2:  # per-kv-head mask (head-split baselines)
         vmask = valid[None, :, None, None, :]
+    else:  # (B, Hkv or 1, L) per-row mask
+        vmask = valid[:, :, None, None, :]
     s = jnp.where(vmask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
@@ -597,17 +637,26 @@ def _decode_attn_headsplit(bp, cfg, x, pos, cache: KC.FullKV, n_fa_kv):
     split only shapes a mask, so patterns differing in it share one
     executable (n_fa_kv == num_kv_heads reduces to full attention).
     """
-    positions = pos[None]
+    positions = _rope_positions(pos)
     q, k, v, _ = A.gqa_qkv(bp["attn"], cfg, x, positions)
     cache = _full_kv_insert(cache, k, v, pos)
     L = cache.k.shape[2]
     idx = jnp.arange(L)
-    full_valid = idx <= pos
-    stream_valid = full_valid & ((idx < cfg.flux.sink)
-                                 | (pos - idx < cfg.flux.local))
-    per_head = jnp.where(
-        (jnp.arange(cfg.num_kv_heads) < n_fa_kv)[:, None],
-        full_valid[None, :], stream_valid[None, :])
+    head_is_full = jnp.arange(cfg.num_kv_heads) < n_fa_kv
+    if jnp.ndim(pos) == 0:
+        full_valid = idx <= pos
+        stream_valid = full_valid & ((idx < cfg.flux.sink)
+                                     | (pos - idx < cfg.flux.local))
+        per_head = jnp.where(head_is_full[:, None],
+                             full_valid[None, :], stream_valid[None, :])
+    else:  # per-slot positions → (B, Hkv, L)
+        full_valid = idx[None, :] <= pos[:, None]
+        stream_valid = full_valid & (
+            (idx[None, :] < cfg.flux.sink)
+            | (pos[:, None] - idx[None, :] < cfg.flux.local))
+        per_head = jnp.where(head_is_full[None, :, None],
+                             full_valid[:, None, :],
+                             stream_valid[:, None, :])
     o = _dot_decode(q, cache.k, cache.v, per_head)
     return A.gqa_out(bp["attn"], cfg, o), cache
 
@@ -617,7 +666,11 @@ def decode_core(params, cfg: ModelConfig, token: jax.Array, caches: List,
                 duo_layers: Optional[Tuple[int, ...]] = None):
     """One autoregressive step, dispatched on cache geometry.
 
-    token (B,1) int32.  Per-layer behavior derives from the cache
+    token (B,1) int32; ``pos`` is () int32 — all rows at the same
+    position (single-request serving) — or (B,) int32 per-slot
+    positions (continuous-batching slot pools: every row is an
+    independent request, with per-row RoPE angles, causal masks and
+    ring arithmetic).  Per-layer behavior derives from the cache
     *type* (ring ⇒ sink+local streaming attention, full/latent ⇒ full
     attention), so the compiled executable is keyed by geometry alone.
     ``duo_layers`` (static tuple of layer indices) marks full-cache GQA
@@ -719,8 +772,9 @@ def decode_many(params, cfg: ModelConfig, logits: jax.Array, caches: List,
     ``lax.scan``, entirely on device.
 
     logits (B,V): next-token logits from prefill (or a previous chunk);
-    pos ()/int32: absolute position of the first generated token; rng:
-    PRNG key (ignored when ``greedy``).  Under jit, mark ``n_steps``,
+    pos () or (B,) int32: absolute position of the first generated
+    token — per-slot when rows are independent requests in a
+    continuous-batching pool; rng: PRNG key (ignored when ``greedy``).  Under jit, mark ``n_steps``,
     ``greedy`` and ``unroll`` static and donate ``caches`` so every
     cache append is an in-place ``dynamic_update_slice`` on the
     original buffers — no per-step host sync, no per-step cache copy.

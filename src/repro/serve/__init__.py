@@ -1,8 +1,17 @@
 from repro.serve.engine import (  # noqa: F401
     GenerationResult,
+    KVStats,
     Request,
     ServeEngine,
+    kv_cache_bytes,
+    kv_cache_stats,
     repack_caches,
     serve_batch,
 )
 from repro.serve import kv_cache  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    ContinuousScheduler,
+    FinishedRequest,
+    RequestMetrics,
+)
+from repro.serve.slots import SlotPool  # noqa: F401

@@ -68,10 +68,33 @@ def repack_caches(cfg: ModelConfig, prefill_caches, routing,
     (incl. any modality prefix); max_len = decode cache capacity for FA
     layers.  Only "sa" changes the geometry (ring); duo layers keep the
     full cache (ragged per-head histories are unrepresentable — §2.3).
+    Every row of the resulting caches starts at the same ``seq_len``;
+    per-slot ``positions``/``length`` diverge once the caches join a
+    continuous-batching slot pool (DESIGN.md §Scheduler).
     """
     flux = cfg.flux
     P = MD.period_len(cfg)
     out = []
+
+    def _full_pad(layer: int) -> int:
+        # ring layers truncate long prompts structurally; full-cache
+        # layers cannot — seq_len > max_len would be a negative pad
+        # surfacing as a cryptic XLA shape error, so refuse loudly.
+        if seq_len > max_len:
+            raise ValueError(
+                f"repack_caches: prompt length seq_len={seq_len} exceeds "
+                f"the decode cache capacity max_len={max_len} at full-"
+                f"cache layer {layer}; raise the engine's max_len or "
+                f"truncate the prompt")
+        return max_len - seq_len
+
+    def _positions(src: np.ndarray, batch: int) -> jax.Array:
+        return jnp.broadcast_to(jnp.asarray(src, jnp.int32),
+                                (batch, len(src)))
+
+    def _length(batch: int) -> jax.Array:
+        return jnp.full((batch,), seq_len, jnp.int32)
+
     for i, kind in enumerate(cfg.layer_kinds):
         per, pos = divmod(i, P)
         c = jax.tree.map(lambda a: a[per], prefill_caches[pos])
@@ -81,52 +104,100 @@ def repack_caches(cfg: ModelConfig, prefill_caches, routing,
             continue
         if cfg.use_mla:
             ckv, kr = c  # (B,S,R), (B,1,S,rope)
+            B = ckv.shape[0]
             if kind == "attn" and routing[i] == "sa":
                 ring, sink = KC.sa_ring(flux, max_len)
                 src = _ring_src(seq_len, sink, ring - sink, ring)
                 out.append(KC.RingLatentKV(
                     ckv=_gather_ring(ckv, src, 1),
                     kr=_gather_ring(kr, src, 2),
-                    positions=jnp.asarray(src, jnp.int32),
-                    length=jnp.int32(seq_len)))
+                    positions=_positions(src, B), length=_length(B)))
             else:
-                pad = max_len - seq_len
+                pad = _full_pad(i)
                 out.append(KC.LatentKV(
                     ckv=jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))),
                     kr=jnp.pad(kr, ((0, 0), (0, 0), (0, pad), (0, 0))),
-                    length=jnp.int32(seq_len)))
+                    length=_length(B)))
             continue
         k, v = c  # (B,Hkv,S,D)
+        B = k.shape[0]
         if kind == "local":
             ring = min(cfg.sliding_window, max_len)
             src = _ring_src(seq_len, 0, ring, ring)
             out.append(KC.RingKV(
                 k=_gather_ring(k, src, 2), v=_gather_ring(v, src, 2),
-                positions=jnp.asarray(src, jnp.int32),
-                length=jnp.int32(seq_len)))
+                positions=_positions(src, B), length=_length(B)))
         elif kind == "attn" and routing[i] == "sa":
             ring, sink = KC.sa_ring(flux, max_len)
             src = _ring_src(seq_len, sink, ring - sink, ring)
             out.append(KC.RingKV(
                 k=_gather_ring(k, src, 2), v=_gather_ring(v, src, 2),
-                positions=jnp.asarray(src, jnp.int32),
-                length=jnp.int32(seq_len)))
+                positions=_positions(src, B), length=_length(B)))
         else:
-            pad = max_len - seq_len
+            pad = _full_pad(i)
             out.append(KC.FullKV(
                 k=jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))),
                 v=jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))),
-                length=jnp.int32(seq_len)))
+                length=_length(B)))
     return out
 
 
+# ---------------------------------------------------------------------------
+# Cache accounting: KV payload vs. bookkeeping overhead
+# ---------------------------------------------------------------------------
+
+@dataclass
+class KVStats:
+    """Decode-cache footprint, split the way the paper counts it:
+    ``payload_bytes`` is the KV (or SSM-state) tensors the routing
+    decision actually shrinks; ``overhead_bytes`` is bookkeeping
+    (``positions``/``length``) that exists for every geometry alike."""
+    payload_bytes: int
+    overhead_bytes: int
+
+    @property
+    def total_bytes(self) -> int:
+        return self.payload_bytes + self.overhead_bytes
+
+
+def kv_cache_stats(caches) -> KVStats:
+    payload = overhead = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+        name = getattr(path[-1], "name", None) if path else None
+        nbytes = leaf.size * leaf.dtype.itemsize
+        if name in KC.OVERHEAD_FIELDS:
+            overhead += nbytes
+        else:
+            payload += nbytes
+    return KVStats(payload_bytes=payload, overhead_bytes=overhead)
+
+
 def kv_cache_bytes(caches) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches))
+    """KV *payload* bytes only — the quantity the paper's KV-reduction
+    claim is about.  Bookkeeping arrays (``positions``, ``length``) are
+    reported separately via ``kv_cache_stats``."""
+    return kv_cache_stats(caches).payload_bytes
 
 
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
+
+def _arr_sig(a) -> Optional[Tuple]:
+    """Traced-array structure (shape, dtype) that keys a jit entry."""
+    return None if a is None else (tuple(a.shape), str(a.dtype))
+
+
+def decode_executable_key(caches, pos, n_steps: int, greedy: bool,
+                          duo_layers, enc_out, rng) -> Tuple:
+    """The full static+structural signature of one ``decode_many``
+    executable.  ``ServeEngine`` and ``ContinuousScheduler`` both record
+    these so the executable-count guard can compare against the jit
+    cache — the pos signature matters because a slot pool decodes with
+    per-slot (B,) positions while ``generate`` uses a shared scalar."""
+    return (KC.cache_geometry(caches), _arr_sig(jnp.asarray(pos)),
+            n_steps, greedy, duo_layers, _arr_sig(enc_out), _arr_sig(rng))
+
 
 @dataclass
 class GenerationResult:
@@ -163,6 +234,7 @@ class ServeEngine:
         self.sparse_decode = sparse_decode
         self.routing_override = routing_override
         self.decode_unroll = decode_unroll
+        self._scheduler = None  # lazy ContinuousScheduler (submit/step)
         # optional decode-attention backend (e.g. the Pallas flash-decode
         # kernel via kernels.decode_attention.make_kernel_decode_attn);
         # installed at trace time, baked into the compiled scan.
@@ -171,6 +243,13 @@ class ServeEngine:
         self._decode_keys: set = set()    # expected decode executables
         self._prefill = jax.jit(partial(MD.prefill, cfg=cfg),
                                 static_argnames=("routing_ctx",))
+        # repack is a long chain of tiny gathers/pads — eager dispatch
+        # costs more than the math at serving rates, so compile it per
+        # (pattern, seq_len).  Admission-heavy continuous batching runs
+        # one of these per request.
+        self._repack = jax.jit(
+            partial(repack_caches, cfg),
+            static_argnames=("routing", "seq_len", "max_len"))
         self._decode_many = jax.jit(
             partial(MD.decode_many, cfg=cfg),
             static_argnames=("n_steps", "greedy", "duo_layers", "unroll"),
@@ -218,19 +297,16 @@ class ServeEngine:
                 f"decode jit signature")
 
     # -- API -----------------------------------------------------------------
-    def generate(self, tokens: np.ndarray, n_steps: int, *,
-                 prefix_embeddings=None, encoder_frames=None,
-                 greedy: bool = True, rng=None,
-                 routing_override=None) -> GenerationResult:
+    def prefill_route_repack(self, tokens: jax.Array, override=None, *,
+                             prefix_embeddings=None, encoder_frames=None):
+        """The shared admission chain: prefill (router fires once) →
+        per-request routing pattern → decode caches of the routed
+        geometry.  Both ``generate`` and the continuous-batching
+        scheduler go through this, so routing precedence can never
+        diverge between the two frontends.
+        Returns (pf, pattern, caches, seq_len)."""
         cfg = self.cfg
-        tokens = jnp.asarray(tokens)
-        B, S = tokens.shape
-        dispatches = 0
-        enc_out = None
-        if self._encode is not None:
-            enc_out = self._encode(params=self.params, frames=encoder_frames)
-            dispatches += 1
-        override = (routing_override if routing_override is not None
+        override = (override if override is not None
                     else self.routing_override)
         routing_ctx = "hard" if (cfg.flux.enabled
                                  and override is None
@@ -239,24 +315,38 @@ class ServeEngine:
                            routing_ctx=routing_ctx,
                            prefix_embeddings=prefix_embeddings,
                            encoder_frames=encoder_frames)
-        dispatches += 1
         decisions = (np.asarray(pf.routing)
                      if pf.routing is not None else None)
         pattern = self._pattern(decisions, override)
-        seq_len = S + (prefix_embeddings.shape[1]
-                       if prefix_embeddings is not None else 0)
-        caches = repack_caches(cfg, pf.caches, pattern, seq_len,
-                               self.max_len)
+        seq_len = tokens.shape[1] + (prefix_embeddings.shape[1]
+                                     if prefix_embeddings is not None else 0)
+        caches = self._repack(pf.caches, routing=pattern,
+                              seq_len=seq_len, max_len=self.max_len)
+        return pf, pattern, caches, seq_len
+
+    def generate(self, tokens: np.ndarray, n_steps: int, *,
+                 prefix_embeddings=None, encoder_frames=None,
+                 greedy: bool = True, rng=None,
+                 routing_override=None) -> GenerationResult:
+        cfg = self.cfg
+        tokens = jnp.asarray(tokens)
+        dispatches = 0
+        enc_out = None
+        if self._encode is not None:
+            enc_out = self._encode(params=self.params, frames=encoder_frames)
+            dispatches += 1
+        pf, pattern, caches, seq_len = self.prefill_route_repack(
+            tokens, routing_override, prefix_embeddings=prefix_embeddings,
+            encoder_frames=encoder_frames)
+        dispatches += 2  # prefill + the jitted repack
         kv_bytes = kv_cache_bytes(caches)
 
         greedy = bool(greedy or rng is None)
         rng = rng if rng is not None else jax.random.key(0)
         fa_heads, duo_layers = MD.routing_head_split(cfg, pattern)
-        def _sig(a):  # traced-arg structure that keys a jit entry
-            return (None if a is None
-                    else (tuple(a.shape), str(a.dtype)))
-        self._decode_keys.add((KC.cache_geometry(caches), n_steps, greedy,
-                               duo_layers, _sig(enc_out), _sig(rng)))
+        pos = jnp.int32(seq_len)
+        self._decode_keys.add(decode_executable_key(
+            caches, pos, n_steps, greedy, duo_layers, enc_out, rng))
         attn_ctx = (MD.use_decode_attn(self.decode_attn)
                     if self.decode_attn is not None
                     else contextlib.nullcontext())
@@ -266,7 +356,7 @@ class ServeEngine:
             warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
             toks, _, _ = self._decode_many(
                 params=self.params, logits=pf.logits, caches=caches,
-                pos=jnp.int32(seq_len), rng=rng, n_steps=n_steps,
+                pos=pos, rng=rng, n_steps=n_steps,
                 greedy=greedy, enc_out=enc_out, fa_heads=fa_heads,
                 duo_layers=duo_layers, unroll=self.decode_unroll)
         dispatches += 1
@@ -281,33 +371,77 @@ class ServeEngine:
             p_fa=None if pf.p_fa is None else np.asarray(pf.p_fa),
             dispatches=dispatches)
 
+    # -- continuous-batching (streaming) frontend ---------------------------
+    def scheduler(self, **kw):
+        """The engine's ``ContinuousScheduler`` (created on first use;
+        kwargs configure it then — slots_per_bucket, chunk, clock)."""
+        if self._scheduler is None:
+            from repro.serve.scheduler import ContinuousScheduler
+            self._scheduler = ContinuousScheduler(self, **kw)
+        elif kw:
+            raise ValueError(
+                "scheduler already created; configure it on first call")
+        return self._scheduler
+
+    def submit(self, req: "Request") -> int:
+        """Queue a request for continuous batching; returns its rid."""
+        return self.scheduler().submit(req)
+
+    def step(self):
+        """One scheduling tick: admit, decode one chunk per geometry
+        bucket, retire.  Returns the requests finished this tick."""
+        return self.scheduler().tick()
+
+    def drain(self):
+        """Tick until every submitted request finished; returns
+        {rid: FinishedRequest} with TTFT/throughput metrics."""
+        return self.scheduler().drain()
+
 
 # ---------------------------------------------------------------------------
-# Batched request frontend
+# Request frontends: batch-synchronous and continuous (streaming)
 # ---------------------------------------------------------------------------
 
 @dataclass
 class Request:
     rid: int
     tokens: np.ndarray  # (S,)
-    n_steps: int
+    n_steps: int        # max new tokens
+    eos_id: Optional[int] = None   # stop early on this token
+    # higher preempts lower when continuous-batching pools fill;
+    # meaningless under serve_batch (no slot contention there)
+    priority: int = 0
+    routing_override: Optional[Tuple[Any, ...]] = None
+
+
+def _trim_eos(tokens: np.ndarray, eos_id: Optional[int]) -> np.ndarray:
+    """Cut a generated stream after the first EOS (inclusive)."""
+    if eos_id is None:
+        return tokens
+    hits = np.flatnonzero(tokens == eos_id)
+    return tokens[:hits[0] + 1] if hits.size else tokens
 
 
 def serve_batch(engine: ServeEngine, requests: Sequence[Request]
                 ) -> Dict[int, np.ndarray]:
-    """Bucket requests by (length, n_steps) and serve each bucket batched.
+    """Bucket requests by (length, n_steps, routing_override) and serve
+    each bucket batched.  ``eos_id`` trims each stream host-side (the
+    fused scan still decodes all n_steps — early exit is what the
+    continuous frontend is for), so both frontends return the same
+    tokens for the same Request.
 
     Layer routing is per-bucket (batch-consensus inside the model); the
     paper evaluates per-request routing at B=1 — buckets of size 1
     reproduce that exactly.
     """
-    buckets: Dict[Tuple[int, int], List[Request]] = {}
+    buckets: Dict[Tuple, List[Request]] = {}
     for r in requests:
-        buckets.setdefault((len(r.tokens), r.n_steps), []).append(r)
+        buckets.setdefault((len(r.tokens), r.n_steps, r.routing_override),
+                           []).append(r)
     results: Dict[int, np.ndarray] = {}
-    for (_, n_steps), rs in buckets.items():
+    for (_, n_steps, override), rs in buckets.items():
         toks = np.stack([r.tokens for r in rs])
-        gen = engine.generate(toks, n_steps)
+        gen = engine.generate(toks, n_steps, routing_override=override)
         for i, r in enumerate(rs):
-            results[r.rid] = gen.tokens[i]
+            results[r.rid] = _trim_eos(gen.tokens[i], r.eos_id)
     return results

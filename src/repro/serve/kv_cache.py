@@ -29,7 +29,7 @@ class FullKV:
     """Complete KV history, appended at ``length``."""
     k: jax.Array  # (B, Hkv, Smax, D)
     v: jax.Array  # (B, Hkv, Smax, D)
-    length: jax.Array  # () int32 — tokens currently valid
+    length: jax.Array  # (B,) int32 — tokens currently valid, per slot
 
 
 @register_dataclass
@@ -39,14 +39,15 @@ class RingKV:
 
     Slots [0, sink) hold the attention-sink tokens; slots
     [sink, sink+local) are a ring over the most recent ``local``
-    positions.  ``positions`` records each slot's absolute position
-    (-1 = empty); shared across the batch (uniform sequence lengths —
-    the engine buckets requests by length).
+    positions.  ``positions`` records each buffer slot's absolute
+    position (-1 = empty), **per batch row**: rows are independent
+    sequences, so a continuous-batching slot pool can hold requests of
+    different lengths in one buffer (DESIGN.md §Scheduler).
     """
     k: jax.Array  # (B, Hkv, sink+local, D)
     v: jax.Array
-    positions: jax.Array  # (sink+local,) int32
-    length: jax.Array  # () int32 — absolute position of next token
+    positions: jax.Array  # (B, sink+local) int32
+    length: jax.Array  # (B,) int32 — absolute position of next token
 
 
 @register_dataclass
@@ -55,7 +56,7 @@ class LatentKV:
     """MLA: compressed latent + shared roped key (full history)."""
     ckv: jax.Array  # (B, Smax, R)
     kr: jax.Array   # (B, 1, Smax, rope_dim)
-    length: jax.Array
+    length: jax.Array  # (B,) int32
 
 
 @register_dataclass
@@ -63,8 +64,8 @@ class LatentKV:
 class RingLatentKV:
     ckv: jax.Array  # (B, ring, R)
     kr: jax.Array   # (B, 1, ring, rope_dim)
-    positions: jax.Array
-    length: jax.Array
+    positions: jax.Array  # (B, ring) int32
+    length: jax.Array  # (B,) int32
 
 
 @register_dataclass
@@ -83,8 +84,19 @@ class MambaCache:
 
 
 def ring_slot(pos: jax.Array, sink: int, local: int) -> jax.Array:
-    """Absolute position → ring slot."""
+    """Absolute position → ring slot (elementwise; pos () or (B,))."""
     return jnp.where(pos < sink, pos, sink + (pos - sink) % local)
+
+
+def _lengths(cache, pos: jax.Array) -> jax.Array:
+    """Per-slot next-token positions after inserting at ``pos``.
+
+    ``pos`` is () — all rows at the same position (the single-request
+    engine path) — or (B,) per-slot.  The stored ``length`` keeps its
+    (B,) shape either way so the cache pytree is a stable scan carry.
+    """
+    return jnp.broadcast_to(pos + 1, cache.length.shape).astype(
+        cache.length.dtype)
 
 
 # The ring geometry (sink, local) is static config — threaded explicitly.
@@ -92,35 +104,62 @@ def ring_slot(pos: jax.Array, sink: int, local: int) -> jax.Array:
 def ring_insert(cache: RingKV, k_new: jax.Array, v_new: jax.Array,
                 pos: jax.Array, sink: int, local: int) -> RingKV:
     slot = ring_slot(pos, sink, local)
-    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=2)
-    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=2)
-    positions = cache.positions.at[slot].set(pos)
-    return RingKV(k=k, v=v, positions=positions, length=pos + 1)
+    if jnp.ndim(pos) == 0:  # uniform: one slice update covers all rows
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=2)
+        positions = cache.positions.at[:, slot].set(pos)
+    else:  # per-slot: every row writes its own ring slot (scatter)
+        b = jnp.arange(k_new.shape[0])
+        k = cache.k.at[b, :, slot].set(k_new[:, :, 0])
+        v = cache.v.at[b, :, slot].set(v_new[:, :, 0])
+        positions = cache.positions.at[b, slot].set(pos)
+    return RingKV(k=k, v=v, positions=positions,
+                  length=_lengths(cache, pos))
 
 
 def ring_latent_insert(cache: RingLatentKV, ckv_new: jax.Array,
                        kr_new: jax.Array, pos: jax.Array, sink: int,
                        local: int) -> RingLatentKV:
     slot = ring_slot(pos, sink, local)
-    ckv = jax.lax.dynamic_update_slice_in_dim(cache.ckv, ckv_new, slot,
-                                              axis=1)
-    kr = jax.lax.dynamic_update_slice_in_dim(cache.kr, kr_new, slot, axis=2)
-    positions = cache.positions.at[slot].set(pos)
-    return RingLatentKV(ckv=ckv, kr=kr, positions=positions, length=pos + 1)
+    if jnp.ndim(pos) == 0:
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache.ckv, ckv_new, slot,
+                                                  axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(cache.kr, kr_new, slot,
+                                                 axis=2)
+        positions = cache.positions.at[:, slot].set(pos)
+    else:
+        b = jnp.arange(ckv_new.shape[0])
+        ckv = cache.ckv.at[b, slot].set(ckv_new[:, 0])
+        kr = cache.kr.at[b, :, slot].set(kr_new[:, :, 0])
+        positions = cache.positions.at[b, slot].set(pos)
+    return RingLatentKV(ckv=ckv, kr=kr, positions=positions,
+                        length=_lengths(cache, pos))
 
 
 def full_insert(cache: FullKV, k_new: jax.Array, v_new: jax.Array,
                 pos: jax.Array) -> FullKV:
-    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, pos, axis=2)
-    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, pos, axis=2)
-    return FullKV(k=k, v=v, length=pos + 1)
+    if jnp.ndim(pos) == 0:
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, pos, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, pos, axis=2)
+    else:
+        b = jnp.arange(k_new.shape[0])
+        k = cache.k.at[b, :, pos].set(k_new[:, :, 0])
+        v = cache.v.at[b, :, pos].set(v_new[:, :, 0])
+    return FullKV(k=k, v=v, length=_lengths(cache, pos))
 
 
 def latent_insert(cache: LatentKV, ckv_new: jax.Array, kr_new: jax.Array,
                   pos: jax.Array) -> LatentKV:
-    ckv = jax.lax.dynamic_update_slice_in_dim(cache.ckv, ckv_new, pos, axis=1)
-    kr = jax.lax.dynamic_update_slice_in_dim(cache.kr, kr_new, pos, axis=2)
-    return LatentKV(ckv=ckv, kr=kr, length=pos + 1)
+    if jnp.ndim(pos) == 0:
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache.ckv, ckv_new, pos,
+                                                  axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(cache.kr, kr_new, pos,
+                                                 axis=2)
+    else:
+        b = jnp.arange(ckv_new.shape[0])
+        ckv = cache.ckv.at[b, pos].set(ckv_new[:, 0])
+        kr = cache.kr.at[b, :, pos].set(kr_new[:, :, 0])
+    return LatentKV(ckv=ckv, kr=kr, length=_lengths(cache, pos))
 
 
 # ---------------------------------------------------------------------------
@@ -142,6 +181,27 @@ def cache_geometry(caches) -> Tuple:
         sig.append((type(c).__name__,)
                    + tuple((tuple(a.shape), str(a.dtype)) for a in leaves))
     return tuple(sig)
+
+
+def slot_geometry(caches) -> Tuple:
+    """``cache_geometry`` with the leading batch/slot axis stripped.
+
+    The admission scheduler keys its geometry buckets on this: a B=1
+    repacked request and a capacity-C slot pool holding it have the
+    same slot geometry, differing only in how many slots ride the
+    leading axis (DESIGN.md §Scheduler)."""
+    sig = []
+    for c in caches:
+        leaves = jax.tree.leaves(c)
+        sig.append((type(c).__name__,)
+                   + tuple((tuple(a.shape[1:]), str(a.dtype))
+                           for a in leaves))
+    return tuple(sig)
+
+
+# Bookkeeping fields — device-resident but not KV payload.  Excluded
+# from the paper's KV-reduction accounting (kv_cache_bytes).
+OVERHEAD_FIELDS = frozenset({"positions", "length"})
 
 
 def ring_size(flux: FluxConfig) -> int:
@@ -167,6 +227,11 @@ def init_layer_cache(cfg: ModelConfig, kind: str, mode: str, batch: int,
 
     kind ∈ layer kinds; mode ∈ {"fa", "sa", "local", None}.
     """
+    if max_len <= 0:
+        raise ValueError(
+            f"init_layer_cache: max_len={max_len} must be positive — "
+            f"a non-positive capacity would allocate empty (or XLA-"
+            f"rejected negative) cache buffers")
     dtype = dtype or cfg.dtype
     flux = cfg.flux
     if kind == "mamba":
@@ -182,8 +247,8 @@ def init_layer_cache(cfg: ModelConfig, kind: str, mode: str, batch: int,
         return RingKV(
             k=jnp.zeros((batch, cfg.num_kv_heads, L, cfg.head_dim), dtype),
             v=jnp.zeros((batch, cfg.num_kv_heads, L, cfg.head_dim), dtype),
-            positions=jnp.full((L,), -1, jnp.int32),
-            length=jnp.zeros((), jnp.int32))
+            positions=jnp.full((batch, L), -1, jnp.int32),
+            length=jnp.zeros((batch,), jnp.int32))
     # attn layer
     if cfg.use_mla:
         if mode == "sa":
@@ -191,23 +256,23 @@ def init_layer_cache(cfg: ModelConfig, kind: str, mode: str, batch: int,
             return RingLatentKV(
                 ckv=jnp.zeros((batch, L, cfg.kv_lora_rank), dtype),
                 kr=jnp.zeros((batch, 1, L, cfg.qk_rope_head_dim), dtype),
-                positions=jnp.full((L,), -1, jnp.int32),
-                length=jnp.zeros((), jnp.int32))
+                positions=jnp.full((batch, L), -1, jnp.int32),
+                length=jnp.zeros((batch,), jnp.int32))
         return LatentKV(
             ckv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
             kr=jnp.zeros((batch, 1, max_len, cfg.qk_rope_head_dim), dtype),
-            length=jnp.zeros((), jnp.int32))
+            length=jnp.zeros((batch,), jnp.int32))
     if mode == "sa":
         L, _ = sa_ring(flux, max_len)
         return RingKV(
             k=jnp.zeros((batch, cfg.num_kv_heads, L, cfg.head_dim), dtype),
             v=jnp.zeros((batch, cfg.num_kv_heads, L, cfg.head_dim), dtype),
-            positions=jnp.full((L,), -1, jnp.int32),
-            length=jnp.zeros((), jnp.int32))
+            positions=jnp.full((batch, L), -1, jnp.int32),
+            length=jnp.zeros((batch,), jnp.int32))
     return FullKV(
         k=jnp.zeros((batch, cfg.num_kv_heads, max_len, cfg.head_dim), dtype),
         v=jnp.zeros((batch, cfg.num_kv_heads, max_len, cfg.head_dim), dtype),
-        length=jnp.zeros((), jnp.int32))
+        length=jnp.zeros((batch,), jnp.int32))
 
 
 def init_decode_caches(cfg: ModelConfig, routing: Tuple[str, ...],

@@ -1,0 +1,291 @@
+"""Continuous-batching admission/step scheduler (DESIGN.md §Scheduler).
+
+The engine's ``generate`` serves one request end-to-end; ``serve_batch``
+buckets by exact (length, n_steps) and runs buckets to completion —
+mixed-length traffic serializes.  This scheduler instead keeps a
+persistent decode batch that requests join and leave per step:
+
+  admit   — prefill a waiting request at B=1 (the Layer Router fires
+            once, per request), repack its caches, and pack it into a
+            free slot of the pool matching its *cache geometry*.
+            Geometry-bucketed admission is the Flux-specific twist: the
+            decode executable is keyed by geometry (PR 1), so mixing
+            geometries in one pool would force recompiles — grouping
+            by geometry preserves the O(#geometries) guarantee.
+  step    — per tick, run ONE compiled ``decode_many`` chunk (default
+            8 steps) for every pool with active slots: chunked scans,
+            not run-to-completion, so new arrivals wait at most one
+            chunk before joining.
+  retire  — finished slots (EOS / max_new_tokens) are freed; their
+            rows are overwritten by the next admission.
+  preempt — when a pool is full, an arrival with strictly higher
+            priority evicts the lowest-priority slot; the victim is
+            re-queued and later re-prefilled over prompt + tokens
+            generated so far (recompute preemption — the standard
+            trade of prefill FLOPs for pool memory).
+
+Decoding is greedy: pooled categorical sampling could not reproduce
+the B=1 sampling stream anyway, and greedy pooled decode is *bitwise*
+equal to sequential ``generate`` (asserted in tests) because every op
+on the decode path is row-independent.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import kv_cache as KC
+from repro.serve.engine import _trim_eos, decode_executable_key
+from repro.serve.slots import SlotPool
+
+
+@dataclass
+class RequestMetrics:
+    """Per-request serving metrics (seconds, ``clock`` domain)."""
+    prompt_len: int = 0
+    n_generated: int = 0
+    arrival_t: float = 0.0
+    admitted_t: Optional[float] = None   # first admission
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    preemptions: int = 0
+
+    @property
+    def queue_delay(self) -> float:
+        return (self.admitted_t or self.arrival_t) - self.arrival_t
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token, from arrival."""
+        return (self.first_token_t or self.arrival_t) - self.arrival_t
+
+    @property
+    def decode_tps(self) -> float:
+        if self.finish_t is None or self.admitted_t is None:
+            return float("nan")
+        dt = self.finish_t - self.admitted_t
+        return self.n_generated / dt if dt > 0 else float("inf")
+
+
+@dataclass
+class FinishedRequest:
+    rid: int
+    tokens: np.ndarray           # (n_generated,)
+    routing: Tuple[Any, ...]     # pattern of the final admission
+    metrics: RequestMetrics
+
+
+@dataclass
+class _InFlight:
+    """Host-side record of a submitted request."""
+    req: Any                     # serve.Request
+    metrics: RequestMetrics
+    generated: List[int] = field(default_factory=list)
+    pattern: Optional[Tuple[Any, ...]] = None
+    pool_key: Optional[Tuple] = None
+    slot: int = -1
+    # geometry bucket seen at the last failed admission — lets the
+    # scheduler skip re-prefilling a request whose bucket is still full
+    # (tokens don't change while waiting, so the routing is stable)
+    cached_key: Optional[Tuple] = None
+
+
+class ContinuousScheduler:
+    """Slot-pool continuous batching over a ``ServeEngine``.
+
+    ``slots_per_bucket``: capacity of each geometry bucket's pool.
+    ``chunk``: decode steps per tick per pool — the scheduling quantum.
+    ``clock``: injectable time source (tests pass a virtual clock).
+    """
+
+    def __init__(self, engine, *, slots_per_bucket: int = 4,
+                 chunk: int = 8,
+                 clock: Callable[[], float] = time.monotonic):
+        if engine.cfg.num_encoder_layers or engine.cfg.num_prefix_tokens:
+            raise ValueError(
+                "continuous batching supports decoder-only text requests; "
+                "encoder/prefix modalities carry per-request side inputs "
+                "the slot pool does not hold yet")
+        self.engine = engine
+        self.slots_per_bucket = int(slots_per_bucket)
+        self.chunk = int(chunk)
+        self.clock = clock
+        self.waiting: List[_InFlight] = []
+        self.pools: Dict[Tuple, SlotPool] = {}
+        self.finished: List[FinishedRequest] = []
+        self._rng = jax.random.key(0)
+        self.ticks = 0
+        self.tokens_generated = 0
+
+    # -- submission --------------------------------------------------------
+    def submit(self, req) -> int:
+        """Queue a request (``serve.Request``); returns its rid."""
+        need = len(req.tokens) + req.n_steps
+        if need > self.engine.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.tokens)}) + n_steps "
+                f"({req.n_steps}) = {need} exceeds the engine's cache "
+                f"capacity max_len={self.engine.max_len}; slot-pool rows "
+                f"past capacity would silently drop KV writes (and a "
+                f"preemption-recompute would crash mid-drain)")
+        inf = _InFlight(req=req, metrics=RequestMetrics(
+            prompt_len=len(req.tokens), arrival_t=self.clock()))
+        self.waiting.append(inf)
+        return req.rid
+
+    # -- admission ---------------------------------------------------------
+    def _prefill_tokens(self, inf: _InFlight) -> np.ndarray:
+        """Prompt plus tokens generated before a preemption: recompute
+        preemption replays the request's own history through prefill."""
+        if not inf.generated:
+            return np.asarray(inf.req.tokens)
+        return np.concatenate([np.asarray(inf.req.tokens),
+                               np.asarray(inf.generated, np.int32)])
+
+    def _has_victim(self, pool: SlotPool, priority: int) -> bool:
+        return any(v.req.priority < priority for v in pool.active.values())
+
+    def _admit(self, inf: _InFlight) -> bool:
+        eng = self.engine
+        if inf.cached_key is not None:
+            known = self.pools.get(inf.cached_key)
+            if (known is not None and not known.free
+                    and not self._has_victim(known, inf.req.priority)):
+                return False  # bucket still full — skip the re-prefill
+        tokens = self._prefill_tokens(inf)
+        pf, pattern, caches, seq_len = eng.prefill_route_repack(
+            jnp.asarray(tokens)[None],
+            getattr(inf.req, "routing_override", None))
+        eng.dispatch_count += 2  # prefill + the jitted repack
+        if any(isinstance(p, tuple) for p in pattern):
+            raise ValueError(
+                "duo head-split patterns carry traced per-layer state the "
+                "slot pool does not thread yet; serve them via generate()")
+        key = KC.slot_geometry(caches)
+        pool = self.pools.get(key)
+        if pool is None:
+            pool = SlotPool.create(eng.cfg, pattern, self.slots_per_bucket,
+                                   eng.max_len, pf.logits)
+            if KC.slot_geometry(pool.caches) != key:
+                raise AssertionError(
+                    "init_decode_caches geometry diverged from "
+                    "repack_caches geometry for one pattern")
+            self.pools[key] = pool
+        if pool.free:
+            slot = pool.free.pop()
+        else:
+            slot = self._preempt(pool, inf.req.priority)
+            if slot is None:
+                inf.cached_key = key
+                return False  # bucket full of equal/higher priority work
+        now = self.clock()
+        if inf.metrics.admitted_t is None:
+            inf.metrics.admitted_t = now
+        inf.pattern, inf.pool_key, inf.slot = pattern, key, slot
+        inf.cached_key = None
+        pool.patterns_served.add(pattern)
+        pool.write(slot, caches, pf.logits, seq_len)
+        pool.active[slot] = inf
+        return True
+
+    def _preempt(self, pool: SlotPool, priority: int) -> Optional[int]:
+        """Evict the lowest-priority active slot if it is strictly below
+        ``priority``; the victim re-queues for recompute admission."""
+        slot, victim = min(
+            pool.active.items(),
+            key=lambda kv: (kv[1].req.priority, -kv[1].metrics.arrival_t))
+        if victim.req.priority >= priority:
+            return None
+        pool.active.pop(slot)
+        victim.metrics.preemptions += 1
+        victim.slot, victim.pool_key = -1, None
+        victim.cached_key = None  # its tokens grew; routing may change
+        self.waiting.append(victim)
+        return slot
+
+    # -- one scheduling tick -----------------------------------------------
+    def tick(self) -> List[FinishedRequest]:
+        """Admit waiting requests, decode one chunk per bucket, retire
+        finished slots.  Returns the requests that finished this tick."""
+        eng = self.engine
+        self.ticks += 1
+        # admit in priority order, oldest first within a priority.
+        # _admit may re-queue preemption victims onto self.waiting, so
+        # iterate a snapshot and let victims wait for the next tick.
+        pending = sorted(self.waiting, key=lambda i: (-i.req.priority,
+                                                      i.metrics.arrival_t))
+        self.waiting = []
+        for inf in pending:
+            if not self._admit(inf):
+                self.waiting.append(inf)
+
+        done: List[FinishedRequest] = []
+        for key, pool in self.pools.items():
+            if not pool.active:
+                continue
+            eng._decode_keys.add(decode_executable_key(
+                pool.caches, pool.pos, self.chunk, True, None, None,
+                self._rng))
+            toks, logits, caches = eng._decode_many(
+                params=eng.params, logits=pool.logits, caches=pool.caches,
+                pos=pool.pos, rng=self._rng, n_steps=self.chunk,
+                greedy=True, enc_out=None, fa_heads=None, duo_layers=None,
+                unroll=eng.decode_unroll)
+            eng.dispatch_count += 1
+            pool.logits, pool.caches = logits, caches
+            pool.advance(self.chunk)
+            toks_np = np.asarray(toks)  # (capacity, chunk)
+            now = self.clock()
+            for slot in sorted(pool.active):
+                inf = pool.active[slot]
+                if not inf.generated:
+                    inf.metrics.first_token_t = now
+                take = min(self.chunk,
+                           inf.req.n_steps - len(inf.generated))
+                eos = getattr(inf.req, "eos_id", None)
+                new = _trim_eos(toks_np[slot, :take], eos).tolist()
+                eos_hit = len(new) < take or (new and new[-1] == eos)
+                inf.generated.extend(new)
+                self.tokens_generated += len(new)
+                if eos_hit or len(inf.generated) >= inf.req.n_steps:
+                    inf.metrics.finish_t = now
+                    inf.metrics.n_generated = len(inf.generated)
+                    done.append(FinishedRequest(
+                        rid=inf.req.rid,
+                        tokens=np.asarray(inf.generated, np.int64),
+                        routing=inf.pattern, metrics=inf.metrics))
+                    pool.active.pop(slot)
+                    pool.free.append(slot)
+        eng._check_executable_guard()
+        self.finished.extend(done)
+        return done
+
+    def drain(self) -> Dict[int, FinishedRequest]:
+        """Tick until every submitted request has finished."""
+        guard = 0
+        while self.waiting or any(p.active for p in self.pools.values()):
+            before = (self.tokens_generated, self.n_active(),
+                      len(self.finished))
+            self.tick()
+            progressed = before != (self.tokens_generated, self.n_active(),
+                                    len(self.finished))
+            guard = 0 if progressed else guard + 1
+            if guard > 10_000:
+                raise RuntimeError(
+                    "scheduler made no progress (no tokens, admissions or "
+                    "completions) for 10k ticks — a request can neither "
+                    "finish nor admit (check slots_per_bucket and "
+                    "priorities)")
+        return {f.rid: f for f in self.finished}
+
+    # -- introspection ------------------------------------------------------
+    def n_active(self) -> int:
+        return sum(len(p.active) for p in self.pools.values())
+
+    def n_geometries(self) -> int:
+        return len(self.pools)

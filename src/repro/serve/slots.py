@@ -1,0 +1,93 @@
+"""Slot-pool decode state for continuous batching (DESIGN.md §Scheduler).
+
+A ``SlotPool`` is the device half of the continuous-batching scheduler:
+one batched decode-cache list whose leading axis is *slots*, plus the
+per-slot last logits and per-slot absolute positions.  Requests join by
+having their B=1 repacked prefill caches written into a free slot row
+(``write``) and leave by simply being marked free — the row's stale
+state is overwritten by the next admission, and free rows decode
+garbage that nobody reads (their masks are self-consistent, so they
+cannot NaN the batch).
+
+Every pool holds exactly ONE cache geometry (the per-layer
+FullKV/RingKV/... buffer shapes dictated by the routing pattern): the
+whole point of geometry-bucketed admission is that one compiled
+``decode_many`` executable serves the pool forever, preserving the
+engine's O(#geometries) executable guarantee while requests of
+different lengths churn through the slots (per-slot ``positions``/
+``length``/RoPE keep shapes static — kv_cache.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve import kv_cache as KC
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _write_slot(pool_caches, pool_logits, pool_pos, one_caches, one_logits,
+                pos, slot):
+    """Write a B=1 repacked request into slot row ``slot`` (traced, so
+    one executable per pool geometry serves every admission)."""
+    caches = jax.tree.map(lambda pool, one: pool.at[slot].set(one[0]),
+                          pool_caches, one_caches)
+    logits = pool_logits.at[slot].set(one_logits[0])
+    return caches, logits, pool_pos.at[slot].set(pos)
+
+
+@dataclass
+class SlotPool:
+    """Fixed-capacity batched decode state for one cache geometry."""
+
+    caches: List[Any]        # per-layer cache pytrees, leading axis = slots
+    logits: jax.Array        # (capacity, V) last logits per slot
+    pos: jax.Array           # (capacity,) int32 next absolute position
+    pattern: Tuple[Any, ...]  # representative routing pattern
+    capacity: int
+    free: List[int] = field(default_factory=list)
+    active: Dict[int, Any] = field(default_factory=dict)  # slot → host state
+    patterns_served: Set[Tuple[Any, ...]] = field(default_factory=set)
+
+    @classmethod
+    def create(cls, cfg: ModelConfig, pattern, capacity: int, max_len: int,
+               logits_like: jax.Array) -> "SlotPool":
+        caches = KC.init_decode_caches(cfg, pattern, capacity, max_len)
+        return cls(
+            caches=caches,
+            logits=jnp.zeros((capacity,) + logits_like.shape[1:],
+                             logits_like.dtype),
+            pos=jnp.zeros((capacity,), jnp.int32),
+            pattern=pattern, capacity=capacity,
+            free=list(range(capacity - 1, -1, -1)))  # pop() → slot 0 first
+
+    def geometry(self) -> Tuple:
+        return KC.cache_geometry(self.caches)
+
+    def slot_geometry(self) -> Tuple:
+        return KC.slot_geometry(self.caches)
+
+    def write(self, slot: int, req_caches, req_logits: jax.Array,
+              seq_len: int) -> None:
+        """Admit a B=1 repacked request into ``slot``."""
+        if KC.slot_geometry(req_caches) != self.slot_geometry():
+            raise ValueError(
+                "slot-pool geometry mismatch: admission must bucket "
+                "requests by cache geometry before packing them")
+        self.caches, self.logits, self.pos = _write_slot(
+            self.caches, self.logits, self.pos, req_caches, req_logits,
+            jnp.int32(seq_len), jnp.int32(slot))
+
+    def advance(self, steps: int) -> None:
+        """Advance active rows by ``steps`` decode positions; park free
+        rows at 0 so their garbage decode never runs past the buffers."""
+        mask = np.zeros((self.capacity,), bool)
+        if self.active:
+            mask[list(self.active)] = True
+        self.pos = jnp.where(jnp.asarray(mask), self.pos + steps, 0)

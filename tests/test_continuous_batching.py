@@ -1,0 +1,265 @@
+"""Continuous-batching scheduler invariants (DESIGN.md §Scheduler).
+
+The three load-bearing guarantees:
+  1. geometry buckets never mix routing patterns / cache geometries;
+  2. the decode jit cache stays ≤ #distinct geometries served across
+     admit/retire/preempt churn (the Flux executable guarantee under
+     continuous batching);
+  3. slot-pool outputs are bitwise-equal to the same requests served
+     sequentially via ``generate`` — pooling is a pure scheduling
+     transformation, not an approximation.
+"""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.models import model as MD
+from repro.serve import (ContinuousScheduler, Request, ServeEngine,
+                         kv_cache)
+
+ARCHS = ["phi3-mini-3.8b", "jamba-1.5-large-398b", "deepseek-v2-236b"]
+
+
+def _setup(arch):
+    cfg = smoke_variant(get_config(arch))
+    params = MD.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _mixed_requests(cfg, n, seed=0, n_steps=7, lens=(20, 28, 36),
+                    **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=lens[i % len(lens)]
+                                        ).astype(np.int32),
+                    n_steps=n_steps, **kw)
+            for i in range(n)]
+
+
+def _patterns3(cfg):
+    """Three distinct geometries: all-FA, all-SA, alternating."""
+    kinds = cfg.layer_kinds
+    fa = tuple("fa" if k == "attn" else None for k in kinds)
+    sa = tuple("sa" if k == "attn" else None for k in kinds)
+    flip, mixed = True, []
+    for k in kinds:
+        mixed.append(("fa" if flip else "sa") if k == "attn" else None)
+        flip = not flip if k == "attn" else flip
+    return [fa, sa, tuple(mixed)]
+
+
+# ---------------------------------------------------------------------------
+# Bitwise equivalence with sequential generate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_pooled_decode_bitwise_matches_sequential_generate(arch):
+    cfg, params = _setup(arch)
+    reqs = _mixed_requests(cfg, 6)
+    eng = ServeEngine(params, cfg, max_len=64)
+    eng.scheduler(slots_per_bucket=3, chunk=4)
+    for r in reqs:
+        eng.submit(r)
+    out = eng.drain()
+    ref = ServeEngine(params, cfg, max_len=64)
+    for r in reqs:
+        gen = ref.generate(r.tokens[None], r.n_steps)
+        assert np.array_equal(out[r.rid].tokens, gen.tokens[0]), r.rid
+        assert out[r.rid].routing == gen.routing
+
+
+def test_chunk_size_does_not_change_outputs():
+    """The scheduling quantum is invisible in the tokens: chunk=2 and
+    chunk=8 produce identical streams (scan chunking is associative)."""
+    cfg, params = _setup("phi3-mini-3.8b")
+    outs = []
+    for chunk in (2, 8):
+        eng = ServeEngine(params, cfg, max_len=64)
+        eng.scheduler(slots_per_bucket=2, chunk=chunk)
+        for r in _mixed_requests(cfg, 4):
+            eng.submit(r)
+        outs.append({k: v.tokens for k, v in eng.drain().items()})
+    assert all(np.array_equal(outs[0][k], outs[1][k]) for k in outs[0])
+
+
+# ---------------------------------------------------------------------------
+# Geometry-bucket purity + executable-count guard under churn
+# ---------------------------------------------------------------------------
+
+def test_buckets_never_mix_patterns_and_executables_stay_bounded():
+    cfg, params = _setup("phi3-mini-3.8b")
+    patterns = _patterns3(cfg)
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=[20, 28, 24][i % 3]
+                                        ).astype(np.int32),
+                    n_steps=3 + (i % 5),
+                    routing_override=patterns[i % 3])
+            for i in range(9)]
+    eng = ServeEngine(params, cfg, max_len=64)
+    sched = eng.scheduler(slots_per_bucket=2, chunk=3)
+    for r in reqs:
+        eng.submit(r)
+    out = eng.drain()
+    assert sorted(out) == list(range(9))
+    # ≥3 geometries churned through admit/retire
+    assert sched.n_geometries() == 3
+    for pool in sched.pools.values():
+        # a bucket serves exactly one routing pattern = one geometry
+        assert len(pool.patterns_served) == 1
+        assert kv_cache.slot_geometry(pool.caches) == pool.slot_geometry()
+    # THE guarantee: one decode executable per geometry, not per
+    # (request, length, pattern) combination
+    assert eng.decode_cache_size() <= sched.n_geometries()
+    eng._check_executable_guard()
+
+
+def test_executable_guard_across_preemption_churn():
+    """Admit/retire/preempt over 3 geometries with tiny pools: the jit
+    cache must still end ≤ #geometries."""
+    cfg, params = _setup("phi3-mini-3.8b")
+    patterns = _patterns3(cfg)
+    rng = np.random.default_rng(4)
+    eng = ServeEngine(params, cfg, max_len=64)
+    sched = eng.scheduler(slots_per_bucket=1, chunk=2)
+    rid = itertools.count()
+    done = {}
+    # staggered submission: every tick injects a higher-priority request
+    # into an already-full bucket, forcing preemptions
+    for wave, prio in enumerate((0, 1, 2)):
+        for p in patterns:
+            i = next(rid)
+            eng.submit(Request(
+                rid=i, tokens=rng.integers(0, cfg.vocab_size,
+                                           size=20 + 4 * wave
+                                           ).astype(np.int32),
+                n_steps=6, priority=prio, routing_override=p))
+        for f in sched.tick():
+            done[f.rid] = f
+    for f in sched.drain().values():
+        done[f.rid] = f
+    assert len(done) == 9
+    assert any(f.metrics.preemptions > 0 for f in done.values())
+    assert sched.n_geometries() == 3
+    assert eng.decode_cache_size() <= 3
+    eng._check_executable_guard()
+    # preempted requests still finish with the right token count
+    assert all(f.metrics.n_generated == 6 for f in done.values())
+
+
+def test_preempted_request_output_is_unchanged():
+    """Recompute preemption replays prompt+generated through prefill —
+    the final stream must equal an uninterrupted generate."""
+    cfg, params = _setup("phi3-mini-3.8b")
+    sa = tuple("sa" if k == "attn" else None for k in cfg.layer_kinds)
+    rng = np.random.default_rng(5)
+    t_low = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+    t_high = rng.integers(0, cfg.vocab_size, size=28).astype(np.int32)
+    eng = ServeEngine(params, cfg, max_len=64)
+    sched = eng.scheduler(slots_per_bucket=1, chunk=2)
+    eng.submit(Request(rid=0, tokens=t_low, n_steps=10,
+                       routing_override=sa, priority=0))
+    sched.tick()  # rid 0 decodes its first chunk, then gets evicted
+    eng.submit(Request(rid=1, tokens=t_high, n_steps=4,
+                       routing_override=sa, priority=9))
+    out = sched.drain()
+    assert out[0].metrics.preemptions >= 1
+    ref = ServeEngine(params, cfg, max_len=64)
+    for rid, toks, n in ((0, t_low, 10), (1, t_high, 4)):
+        gen = ref.generate(toks[None], n, routing_override=sa)
+        assert np.array_equal(out[rid].tokens, gen.tokens[0]), rid
+
+
+# ---------------------------------------------------------------------------
+# Frontend behavior: EOS, metrics, guards
+# ---------------------------------------------------------------------------
+
+def test_eos_retires_slot_early():
+    cfg, params = _setup("phi3-mini-3.8b")
+    rng = np.random.default_rng(6)
+    toks = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+    ref = ServeEngine(params, cfg, max_len=64)
+    full = ref.generate(toks[None], 8).tokens[0]
+    eos = int(full[2])
+    eng = ServeEngine(params, cfg, max_len=64)
+    eng.submit(Request(rid=0, tokens=toks, n_steps=8, eos_id=eos))
+    out = eng.drain()
+    stop = list(full).index(eos)
+    assert out[0].tokens.tolist() == full[:stop + 1].tolist()
+    assert out[0].metrics.n_generated == stop + 1
+
+
+def test_frontends_agree_on_eos_and_override():
+    """The same Request must yield the same tokens from serve_batch and
+    from submit/drain — eos_id and routing_override included."""
+    from repro.serve import serve_batch
+    cfg, params = _setup("phi3-mini-3.8b")
+    sa = tuple("sa" if k == "attn" else None for k in cfg.layer_kinds)
+    rng = np.random.default_rng(8)
+    toks = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+    probe = ServeEngine(params, cfg, max_len=64).generate(
+        toks[None], 8, routing_override=sa)
+    eos = int(probe.tokens[0][3])
+    req = Request(rid=0, tokens=toks, n_steps=8, eos_id=eos,
+                  routing_override=sa)
+    batch_out = serve_batch(ServeEngine(params, cfg, max_len=64), [req])
+    eng = ServeEngine(params, cfg, max_len=64)
+    eng.submit(req)
+    cont_out = eng.drain()
+    assert np.array_equal(batch_out[0], cont_out[0].tokens)
+    assert batch_out[0].tolist()[-1] == eos
+
+
+def test_request_metrics_are_recorded():
+    cfg, params = _setup("phi3-mini-3.8b")
+    clock = itertools.count()  # deterministic virtual seconds
+    eng = ServeEngine(params, cfg, max_len=64)
+    eng.scheduler(slots_per_bucket=2, chunk=4,
+                  clock=lambda: float(next(clock)))
+    for r in _mixed_requests(cfg, 3, n_steps=5):
+        eng.submit(r)
+    out = eng.drain()
+    for f in out.values():
+        m = f.metrics
+        assert m.admitted_t is not None and m.finish_t is not None
+        assert m.queue_delay >= 0
+        assert m.ttft >= m.queue_delay
+        assert m.finish_t >= m.first_token_t
+        assert m.n_generated == 5 and m.prompt_len in (20, 28, 36)
+
+
+def test_scheduler_rejects_duo_and_encoder_configs():
+    cfg, params = _setup("phi3-mini-3.8b")
+    eng = ServeEngine(params, cfg, max_len=64)
+    sched = eng.scheduler(slots_per_bucket=1, chunk=2)
+    duo = tuple(("duo", 1) if k == "attn" else None
+                for k in cfg.layer_kinds)
+    rng = np.random.default_rng(7)
+    eng.submit(Request(rid=0,
+                       tokens=rng.integers(0, cfg.vocab_size, size=20
+                                           ).astype(np.int32),
+                       n_steps=2, routing_override=duo))
+    with pytest.raises(ValueError, match="duo"):
+        sched.tick()
+    cfg_a = smoke_variant(get_config("whisper-tiny"))
+    params_a = MD.init_params(jax.random.key(0), cfg_a)
+    with pytest.raises(ValueError, match="decoder-only"):
+        ServeEngine(params_a, cfg_a, max_len=64).scheduler()
+
+
+def test_slot_pool_write_rejects_geometry_mismatch():
+    from repro.serve.slots import SlotPool
+    cfg, params = _setup("phi3-mini-3.8b")
+    fa = tuple("fa" if k == "attn" else None for k in cfg.layer_kinds)
+    sa = tuple("sa" if k == "attn" else None for k in cfg.layer_kinds)
+    import jax.numpy as jnp
+    logits = jnp.zeros((1, cfg.vocab_size), jnp.float32)
+    pool = SlotPool.create(cfg, fa, 2, 48, logits)
+    wrong = kv_cache.init_decode_caches(cfg, sa, 1, 48)
+    with pytest.raises(ValueError, match="geometry"):
+        pool.write(0, wrong, logits, 8)

@@ -143,9 +143,50 @@ def test_repack_max_len_truncates_ring():
     caches = repack_caches(cfg, pf.caches, pattern, S, max_len)
     ring = [c for c in caches if isinstance(c, kv_cache.RingKV)][0]
     assert ring.k.shape[2] == max_len
-    kept = sorted(int(p) for p in np.asarray(ring.positions) if p >= 0)
+    assert ring.positions.shape == (B, max_len)  # per-slot bookkeeping
+    kept = sorted(int(p) for p in np.asarray(ring.positions[0]) if p >= 0)
     expect = sorted(set(range(flux.sink)) | set(range(S - 8, S)))
     assert kept == expect
+
+
+def test_repack_prompt_longer_than_max_len_rejected():
+    """seq_len > max_len must raise a loud ValueError naming both values
+    — not a negative pad surfacing as a cryptic XLA shape error."""
+    cfg, params, toks = _setup("phi3-mini-3.8b")
+    pattern = tuple("fa" if k == "attn" else None for k in cfg.layer_kinds)
+    pf = MD.prefill(params, cfg, toks[:, :S])
+    with pytest.raises(ValueError) as ei:
+        repack_caches(cfg, pf.caches, pattern, S, S - 4)
+    assert f"seq_len={S}" in str(ei.value)
+    assert f"max_len={S - 4}" in str(ei.value)
+
+
+def test_init_layer_cache_rejects_nonpositive_max_len():
+    cfg, _, _ = _setup("phi3-mini-3.8b")
+    with pytest.raises(ValueError, match="max_len=0"):
+        kv_cache.init_layer_cache(cfg, "attn", "fa", 1, 0)
+
+
+def test_kv_cache_stats_splits_payload_from_overhead():
+    """positions/length bookkeeping must not pollute the paper's
+    KV-reduction numbers: kv_cache_bytes counts payload only."""
+    from repro.serve.engine import kv_cache_stats
+    cfg, params, toks = _setup("phi3-mini-3.8b")
+    pattern = tuple("sa" if k == "attn" else None for k in cfg.layer_kinds)
+    pf = MD.prefill(params, cfg, toks[:, :S])
+    caches = repack_caches(cfg, pf.caches, pattern, S, S + N)
+    stats = kv_cache_stats(caches)
+    ring = [c for c in caches if isinstance(c, kv_cache.RingKV)]
+    expect_overhead = sum(
+        c.positions.size * c.positions.dtype.itemsize
+        + c.length.size * c.length.dtype.itemsize for c in caches
+        if hasattr(c, "length"))
+    assert ring and stats.overhead_bytes == expect_overhead
+    assert stats.payload_bytes + stats.overhead_bytes == stats.total_bytes
+    assert kv_cache_bytes(caches) == stats.payload_bytes
+    # raw leaf-sum counts strictly more than the payload
+    raw = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(caches))
+    assert raw == stats.total_bytes > stats.payload_bytes
 
 
 def test_repack_max_len_below_sink_rejected():
@@ -175,7 +216,7 @@ def test_ring_latent_roundtrip_vs_dense_reference():
     layer = cfg.layer_kinds.index("attn")
     ring, full = ring_caches[layer], full_caches[layer]
     assert isinstance(ring, kv_cache.RingLatentKV)
-    pos_np = np.asarray(ring.positions)
+    pos_np = np.asarray(ring.positions[0])  # rows identical after repack
     for slot, p in enumerate(pos_np):
         if p < 0:
             continue
