@@ -30,7 +30,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import jax
 import numpy as np
 
-from benchmarks.common import CACHE_DIR, Row, bench_cfg
+from benchmarks.common import CACHE_DIR, Row, bench_cfg, mixed_pattern
 from repro.models import model as MD
 from repro.serve import ContinuousScheduler, Request, ServeEngine
 
@@ -118,14 +118,6 @@ def _run_continuous(eng: ServeEngine, reqs: List[Request],
             "ticks": sched.ticks}
 
 
-def _mixed_pattern(cfg):
-    flip, out = True, []
-    for k in cfg.layer_kinds:
-        out.append(("fa" if flip else "sa") if k == "attn" else None)
-        flip = not flip if k == "attn" else flip
-    return tuple(out)
-
-
 def run(n_requests: int = 16, n_steps: int = 128, slots: int = 16,
         chunk: int = 8, mean_gap_s: float = 0.005) -> List[Row]:
     cfg = bench_cfg()
@@ -139,7 +131,7 @@ def run(n_requests: int = 16, n_steps: int = 128, slots: int = 16,
     # pool); an untrained router would scatter requests over arbitrary
     # geometries and measure router noise instead.  Multi-geometry
     # admission is covered by tests/test_continuous_batching.py.
-    pattern = _mixed_pattern(cfg)
+    pattern = mixed_pattern(cfg)
     # separate engines (separate jit caches) — warm each path once on
     # the full workload so compile time stays out of the timings, then
     # keep the best of ``reps`` interleaved measurements per path (the

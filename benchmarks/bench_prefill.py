@@ -1,0 +1,232 @@
+"""Chunked cache-resident prefill vs monolithic prefill→repack
+(DESIGN.md §Prefill pipeline).
+
+Two claims, measured on the same engine weights:
+
+  wall-clock — admission latency (prefill + cache build) for a long
+      prompt, monolithic (full-sequence prefill, host-planned repack)
+      vs chunked (route on the first chunk, stream the rest directly
+      into decode-geometry caches).  The chunked path should be no
+      slower at 4k and strictly better as prompts grow: it never runs
+      the second full pass over KV that repack is.
+  peak SA-layer KV — the monolithic path materializes O(S) KV at every
+      layer before repacking; the chunked path's live SA-layer state is
+      the ring, whose size is independent of S.  BENCH_prefill.json
+      records both so the perf trajectory can assert ring-boundedness.
+
+Plus p50 TTFT under mixed prefill+decode continuous load: long prompts
+admitted chunk-by-chunk (Sarathi-style mixed ticks) vs monolithic
+admission that stalls the tick for a whole prefill.
+
+Writes ``BENCH_prefill.json``; ``--smoke`` shrinks shapes for CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CACHE_DIR, Row, bench_cfg, mixed_pattern
+from repro.models import model as MD
+from repro.serve import ContinuousScheduler, Request, ServeEngine
+
+
+def _sa_layer_bytes(caches, cfg, pattern) -> int:
+    """KV bytes held for SA-routed layers in a decode-cache list."""
+    total = 0
+    for i, kind in enumerate(cfg.layer_kinds):
+        if kind != "attn" or pattern[i] != "sa":
+            continue
+        for leaf in jax.tree.leaves(caches[i]):
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def _monolithic_sa_bytes(pf_caches, cfg, pattern) -> int:
+    """KV bytes the monolithic prefill materializes at SA layers."""
+    P = MD.period_len(cfg)
+    total = 0
+    for i, kind in enumerate(cfg.layer_kinds):
+        if kind != "attn" or pattern[i] != "sa":
+            continue
+        per, pos = divmod(i, P)
+        c = jax.tree.map(lambda a: a[per], pf_caches[pos])
+        for leaf in jax.tree.leaves(c):
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def _time_once(fn) -> float:
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(jax.tree.leaves(out))
+    return time.perf_counter() - t0
+
+
+def bench_admission(cfg, params, seq_len: int, chunk: int,
+                    reps: int = 3) -> Dict:
+    pattern = mixed_pattern(cfg)
+    max_len = seq_len + 64
+    toks = jax.random.randint(jax.random.key(0), (1, seq_len), 0,
+                              cfg.vocab_size)
+    mono = ServeEngine(params, cfg, max_len=max_len, prefill_chunk=None,
+                       routing_override=pattern)
+    chnk = ServeEngine(params, cfg, max_len=max_len, prefill_chunk=chunk,
+                       routing_override=pattern)
+    # warm both (compile), then best-of-``reps`` with the two paths
+    # interleaved — host CPU throughput drifts between runs, and
+    # back-to-back blocks would time two different machines
+    pf, _, caches_m, _ = mono.prefill_route_repack(toks)
+    job = chnk.prefill_chunked(toks)
+    t_mono = t_chnk = float("inf")
+    for _ in range(reps):
+        t_mono = min(t_mono, _time_once(
+            lambda: mono.prefill_route_repack(toks)[2]))
+        t_chnk = min(t_chnk, _time_once(
+            lambda: chnk.prefill_chunked(toks).caches))
+    sa_mono = _monolithic_sa_bytes(pf.caches, cfg, pattern)
+    sa_chnk = _sa_layer_bytes(job.caches, cfg, pattern)
+    return {
+        "seq_len": seq_len, "chunk": chunk,
+        "monolithic_s": t_mono, "chunked_s": t_chnk,
+        "speedup": t_mono / t_chnk if t_chnk else float("nan"),
+        "sa_peak_kv_bytes_monolithic": sa_mono,
+        "sa_peak_kv_bytes_chunked": sa_chnk,
+        "n_chunks": job.n_chunks,
+    }
+
+
+def bench_ttft(cfg, params, long_len: int, chunk: int,
+               n_requests: int = 8) -> Dict:
+    """p50 TTFT under mixed prefill+decode continuous load.
+
+    Short prompts arrive *while* long prompts are being admitted: the
+    monolithic scheduler's tick blocks on each full-prompt prefill, so
+    a short arrival queues behind the whole long admission; the chunked
+    scheduler streams at most ``prefill_chunks_per_tick`` chunks per
+    tick, so short requests slip in between chunks and resident
+    requests keep decoding.  TTFT is measured from each request's
+    (staggered) arrival."""
+    rng = np.random.default_rng(3)
+    lens = [long_len if i % 2 == 0 else 16 + 4 * i
+            for i in range(n_requests)]
+    arrivals = np.cumsum(rng.exponential(0.25, size=n_requests))
+    max_len = long_len + 64
+    pattern = mixed_pattern(cfg)
+
+    def drive(eng) -> Dict:
+        sched = ContinuousScheduler(eng, slots_per_bucket=n_requests,
+                                    chunk=4, prefill_chunks_per_tick=2)
+        reqs = [Request(rid=i, tokens=rng.integers(
+            0, cfg.vocab_size, size=lens[i]).astype(np.int32), n_steps=16)
+            for i in range(n_requests)]
+        pending = sorted(range(n_requests), key=lambda i: arrivals[i])
+        done, tick_s = {}, []
+        t0 = time.perf_counter()
+        while len(done) < n_requests:
+            now = time.perf_counter() - t0
+            while pending and arrivals[pending[0]] <= now:
+                sched.submit(reqs[pending.pop(0)])
+            if sched.n_active() or sched.waiting:
+                tt = time.perf_counter()
+                for f in sched.tick():
+                    done[f.rid] = f
+                tick_s.append(time.perf_counter() - tt)
+            elif pending:
+                time.sleep(min(max(arrivals[pending[0]] - now, 0.0),
+                               0.005))
+        ttft = sorted(f.metrics.ttft for f in done.values())
+        return {
+            "wall_s": time.perf_counter() - t0,
+            "ttft_p50_s": float(np.percentile(ttft, 50)),
+            "ttft_p95_s": float(np.percentile(ttft, 95)),
+            # max tick duration = worst decode stall a resident request
+            # sees while admissions happen (the mixed-tick claim)
+            "max_tick_s": float(max(tick_s)),
+            "p95_tick_s": float(np.percentile(tick_s, 95)),
+            "prefill_chunk_ticks": sched.prefill_chunk_ticks,
+        }
+
+    out = {}
+    for name, pc in (("monolithic", None), ("chunked", chunk)):
+        eng = ServeEngine(params, cfg, max_len=max_len, prefill_chunk=pc,
+                          routing_override=pattern)
+        drive(eng)            # warm every executable on the real load
+        out[name] = drive(eng)
+    out["ttft_p50_ratio"] = (out["monolithic"]["ttft_p50_s"]
+                             / max(out["chunked"]["ttft_p50_s"], 1e-9))
+    # >1 means chunked admission bounds the worst decode stall tighter
+    # than a monolithic full-prompt admission does
+    out["decode_stall_ratio"] = (out["monolithic"]["max_tick_s"]
+                                 / max(out["chunked"]["max_tick_s"], 1e-9))
+    return out
+
+
+def run(prompts=(4096, 16384), chunk: int = 512,
+        ttft_long: int = 2048) -> List[Row]:
+    cfg = bench_cfg()
+    params = MD.init_params(jax.random.key(0), cfg)
+    admission = [bench_admission(cfg, params, s, chunk) for s in prompts]
+    ttft = bench_ttft(cfg, params, ttft_long, chunk)
+    results = {"admission": admission, "ttft_mixed_load": ttft}
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    with open(os.path.join(CACHE_DIR, "BENCH_prefill.json"), "w") as f:
+        json.dump({"timestamp": time.time(),
+                   "device": jax.default_backend(),
+                   "results": results}, f, indent=2)
+    rows = []
+    for a in admission:
+        rows.append(Row(
+            f"prefill/chunked_vs_monolithic@{a['seq_len']}",
+            a["chunked_s"] * 1e6,
+            f"speedup={a['speedup']:.2f}x;"
+            f"sa_kv={a['sa_peak_kv_bytes_chunked']};"
+            f"sa_kv_mono={a['sa_peak_kv_bytes_monolithic']};"
+            f"chunks={a['n_chunks']}"))
+    rows.append(Row(
+        "prefill/ttft_mixed_load", ttft["chunked"]["wall_s"] * 1e6,
+        f"ttft_p50={ttft['chunked']['ttft_p50_s'] * 1e3:.0f}ms;"
+        f"ttft_p50_mono={ttft['monolithic']['ttft_p50_s'] * 1e3:.0f}ms;"
+        f"ratio={ttft['ttft_p50_ratio']:.2f}x;"
+        f"stall={ttft['chunked']['max_tick_s'] * 1e3:.0f}ms;"
+        f"stall_mono={ttft['monolithic']['max_tick_s'] * 1e3:.0f}ms;"
+        f"stall_ratio={ttft['decode_stall_ratio']:.2f}x"))
+    return rows
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    rows = (run(prompts=(192, 384), chunk=32, ttft_long=96)
+            if smoke else run())
+    for r in rows:
+        print(r.csv())
+    data = json.load(open(os.path.join(CACHE_DIR, "BENCH_prefill.json")))
+    ok = True
+    for a in data["results"]["admission"]:
+        # the structural claim is non-negotiable at any scale: SA-layer
+        # live KV must not scale with the prompt
+        if (a["sa_peak_kv_bytes_chunked"]
+                >= a["sa_peak_kv_bytes_monolithic"]):
+            print(f"# FAIL sa-layer peak KV not ring-bounded at "
+                  f"{a['seq_len']}")
+            ok = False
+        if a["speedup"] < 1.0:
+            print(f"# WARN chunked admission {a['speedup']:.2f}x at "
+                  f"{a['seq_len']}"
+                  + (" (smoke shapes — advisory)" if smoke else ""))
+    if not ok:
+        sys.exit(1)
+    print("# ok chunked prefill: SA-layer peak KV ring-bounded")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,17 @@ def bench_cfg():
         flux=base.flux.replace(sink=4, local=16, pool_size=8))
 
 
+def mixed_pattern(cfg):
+    """Alternating fa/sa override over routed layers — pins one
+    realistic mixed cache geometry so serving benches measure the
+    scheduling/admission transformation, not router noise."""
+    flip, out = True, []
+    for k in cfg.layer_kinds:
+        out.append(("fa" if flip else "sa") if k == "attn" else None)
+        flip = not flip if k == "attn" else flip
+    return tuple(out)
+
+
 _CTX = {}
 
 

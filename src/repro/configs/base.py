@@ -226,12 +226,16 @@ class InputShape:
     name: str
     seq_len: int
     global_batch: int
-    kind: str  # train | prefill | decode
+    kind: str  # train | prefill | prefill_chunked | decode
 
 
 SHAPES: Dict[str, InputShape] = {
     "train_4k": InputShape("train_4k", 4096, 256, "train"),
     "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    # one streamed chunk of the chunked cache-resident prefill; seq_len
+    # is the decode-cache capacity the chunk writes into
+    "prefill_chunked_32k": InputShape("prefill_chunked_32k", 32768, 32,
+                                      "prefill_chunked"),
     "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
     "long_500k": InputShape("long_500k", 524288, 1, "decode"),
 }
@@ -255,6 +259,9 @@ def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
         specs["task_type"] = jax.ShapeDtypeStruct((B,), i32)
     elif shape.kind == "prefill":
         specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    elif shape.kind == "prefill_chunked":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, min(2048, S)), i32)
+        specs["start"] = jax.ShapeDtypeStruct((), i32)
     else:  # decode
         specs["token"] = jax.ShapeDtypeStruct((B, 1), i32)
         specs["cache_len"] = jax.ShapeDtypeStruct((), i32)

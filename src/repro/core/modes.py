@@ -224,6 +224,109 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, mode: AttnMode,
 
 
 # ---------------------------------------------------------------------------
+# Position-explicit masked attention (chunked cache-resident prefill)
+# ---------------------------------------------------------------------------
+#
+# A ring decode cache stores keys out of positional order (slot index ≠
+# absolute position), so the blocked engine above — which derives key
+# positions from array offsets — cannot attend over it.  The chunked
+# prefill instead carries explicit per-slot positions and masks against
+# them; the kv extent (ring + chunk) is small, so a single dense masked
+# softmax is the right shape on TPU.
+
+def streaming_valid(q_positions: jax.Array, kv_positions: jax.Array,
+                    sink: int, local: int) -> jax.Array:
+    """Sink+local visibility by absolute position.
+
+    q_positions (Sq,) or (B, Sq); kv_positions (B, L) with -1 = empty
+    slot.  Returns (B, Sq, L) bool.  ``sink=0`` degenerates to a pure
+    sliding window (the "local" layer kind).
+    """
+    q = (q_positions[None, :, None] if q_positions.ndim == 1
+         else q_positions[:, :, None])
+    kv = kv_positions[:, None, :]
+    vis = (kv >= 0) & (kv <= q)
+    return vis & ((kv < sink) | (q - kv < local))
+
+
+def chunk_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           start: jax.Array, *, kv_block: int = 512,
+                           scale: Optional[float] = None) -> jax.Array:
+    """Causal attention of a chunk of queries over a cache buffer.
+
+    q (B,Hq,C,D) at absolute positions [start, start+C); k/v
+    (B,Hkv,M,D) hold valid keys at positions [0, start+C) of an
+    M-capacity buffer (everything beyond is zeros).  Flash-style
+    online-softmax over kv blocks with a **traced trip count**
+    ``ceil((start+C)/kv_block)`` — the expressed compute scales with
+    the live prefix, not the buffer capacity, so early chunks of a
+    chunked prefill don't pay for cache they haven't written yet
+    (a dense masked call over M would: XLA cannot skip masked FLOPs).
+    ``start`` stays traced, preserving one executable per chunk bucket.
+    """
+    B, Hq, C, D = q.shape
+    Hkv, M = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    Dv = v.shape[-1]
+    scale = scale if scale is not None else D ** -0.5
+    kb = min(kv_block, M)
+    q5 = q.reshape(B, Hkv, G, C, D)
+    q_pos = start + jnp.arange(C)
+    nb = (start + C + kb - 1) // kb  # traced: only live blocks run
+    neg = jnp.float32(NEG_INF)
+
+    def body(j, carry):
+        m, l, acc = carry
+        # clamp so the final block stays in bounds; the >= j*kb mask
+        # term drops any keys the clamp re-reads from the prior block
+        s0 = jnp.minimum(j * kb, M - kb)
+        ks = lax.dynamic_slice_in_dim(k, s0, kb, axis=2)
+        vs = lax.dynamic_slice_in_dim(v, s0, kb, axis=2)
+        kv_pos = s0 + jnp.arange(kb)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", q5, ks,
+                       preferred_element_type=jnp.float32) * scale
+        mask = ((kv_pos[None, :] <= q_pos[:, None])
+                & (kv_pos[None, :] >= j * kb))
+        s = jnp.where(mask[None, None, None], s, neg)
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        m2 = jnp.maximum(m2, neg / 2)  # guard fully-masked rows
+        p = jnp.exp(s - m2)
+        corr = jnp.exp(m - m2)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v.dtype), vs,
+            preferred_element_type=jnp.float32)
+        return m2, l, acc
+
+    m0 = jnp.full((B, Hkv, G, C, 1), neg, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, C, 1), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, G, C, Dv), jnp.float32)
+    _, l, acc = lax.fori_loop(0, nb, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-20)
+    return out.reshape(B, Hq, C, Dv).astype(q.dtype)
+
+
+def masked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid: jax.Array,
+                     scale: Optional[float] = None) -> jax.Array:
+    """q (B,Hq,Sq,D), k/v (B,Hkv,L,D), valid (B, 1|Hkv, Sq, L) bool.
+
+    Dense masked softmax attention with caller-supplied validity — no
+    positional assumptions about the key layout.  Returns (B,Hq,Sq,Dv)
+    in q.dtype."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    Dv = v.shape[-1]
+    scale = scale if scale is not None else D ** -0.5
+    q5 = _gqa_view(q, Hkv)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q5, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, :, None], s, NEG_INF)
+    o = _softmax_attend(s, v)
+    return o.reshape(B, Hq, Sq, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Triangle (TriangleMix): streaming body + dense last chunk
 # ---------------------------------------------------------------------------
 

@@ -44,10 +44,29 @@ def pool_prefix_suffix(x_q: jax.Array, pool_size: int) -> jax.Array:
     return jnp.concatenate([prefix, suffix], axis=-1)
 
 
+def pool_prefix(x_q: jax.Array, pool_size: int) -> jax.Array:
+    """Prefix-only pooling: the prefix mean fed to *both* encoder halves.
+
+    The chunked serving prefill (DESIGN.md §Prefill pipeline) routes on
+    the first chunk, before the suffix of the prompt exists.  Decisions
+    must not depend on the chunking, so this variant pools only the
+    first ``pool_size`` tokens — any chunk covering them yields the
+    identical decision, and the monolithic path can reproduce it
+    exactly (``routing_ctx="hard_prefix"``).  The router's 2F input
+    layout is kept by duplicating the prefix mean into the suffix half.
+    """
+    p = min(pool_size, x_q.shape[1])
+    prefix = jnp.mean(x_q[:, :p].astype(jnp.float32), axis=1)
+    return jnp.concatenate([prefix, prefix], axis=-1)
+
+
 def router_logits(params: Dict[str, jax.Array], x_q: jax.Array,
-                  pool_size: int) -> jax.Array:
+                  pool_size: int,
+                  pooling: str = "prefix_suffix") -> jax.Array:
     """x_q (B, S, F) → logits (B, 2) = (π_FA, π_SA)."""
-    pooled = pool_prefix_suffix(x_q, pool_size)
+    pool = {"prefix_suffix": pool_prefix_suffix,
+            "prefix": pool_prefix}[pooling]
+    pooled = pool(x_q, pool_size)
     h = jax.nn.gelu(pooled @ params["enc_w"] + params["enc_b"])
     h = jax.nn.gelu(h @ params["head_w1"] + params["head_b1"])
     return h @ params["head_w2"] + params["head_b2"]
@@ -64,12 +83,13 @@ def soft_route(params: Dict[str, jax.Array], x_q: jax.Array,
 
 
 def hard_route(params: Dict[str, jax.Array], x_q: jax.Array,
-               flux: FluxConfig) -> Tuple[jax.Array, jax.Array]:
+               flux: FluxConfig, pooling: str = "prefix_suffix"
+               ) -> Tuple[jax.Array, jax.Array]:
     """Deterministic inference routing (§3.3).
 
     Returns (r_hard (B,) ∈ {0,1} with 1 = FA, p_fa (B,) the underlying
     probability, useful for logging/consensus)."""
-    logits = router_logits(params, x_q, flux.pool_size)
+    logits = router_logits(params, x_q, flux.pool_size, pooling)
     p_fa = jax.nn.softmax(logits, axis=-1)[:, 0]
     return (logits[:, 0] > logits[:, 1]).astype(jnp.int32), p_fa
 

@@ -5,6 +5,9 @@ real launchers.
   train_4k     → RouterTrainer.step_impl (the paper's training recipe:
                  frozen backbone, router + λ updates, soft routing).
   prefill_32k  → MD.prefill with live hard routing (lax.cond per layer).
+  prefill_chunked_32k → MD.prefill_chunk: one streamed chunk of the
+                 cache-resident prefill writing into decode-geometry
+                 caches (seq_len = cache capacity, ``chunk`` = bucket).
   decode_*     → MD.decode_step under a representative static routing
                  pattern (Ω_MSR = 0.5 interleave over routed layers —
                  §3.3: the pattern is fixed after prefill).
@@ -147,6 +150,42 @@ def build_prefill(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
                     model_flops_estimate(cfg, shape))
 
 
+def build_prefill_chunked(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                          msr: float = 0.5, chunk: int = 2048) -> Workload:
+    """One streamed chunk of the chunked cache-resident prefill
+    (DESIGN.md §Prefill pipeline): tokens (B, chunk) + decode-geometry
+    caches sized to ``shape.seq_len`` + a traced start offset."""
+    B, S = shape.global_batch, shape.seq_len
+    chunk = min(chunk, S)
+    params = abstract_params(cfg)
+    routable = bool(cfg.routable_layers()) and cfg.flux.enabled
+    pattern = (representative_pattern(cfg, msr) if routable else tuple(
+        ("fa" if k == "attn" else None) for k in cfg.layer_kinds))
+    caches = jax.eval_shape(
+        lambda: KC.init_decode_caches(cfg, pattern, B, S))
+    extra = {}
+    if cfg.family == "audio":
+        extra["enc_out"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_ctx, cfg.d_model), cfg.dtype)
+
+    def fn(params, tokens, caches, start, *extra_args):
+        kw = dict(zip(sorted(extra), extra_args))
+        return MD.prefill_chunk(params, cfg, tokens, caches, start, **kw)
+
+    args = (params, jax.ShapeDtypeStruct((B, chunk), jnp.int32), caches,
+            jax.ShapeDtypeStruct((), jnp.int32)) + tuple(
+        extra[k] for k in sorted(extra))
+    in_sh = (SH.param_shardings(params, mesh),
+             SH.batch_sharding(mesh, (B, chunk)),
+             SH.cache_shardings(caches, mesh, B),
+             SH.replicated(mesh)) + tuple(
+        SH.batch_sharding(mesh, extra[k].shape) for k in sorted(extra))
+    flops = model_flops_estimate(
+        cfg, InputShape(shape.name, chunk, B, "prefill"))
+    return Workload(f"prefill_chunked[msr={msr},c={chunk}]", fn, args,
+                    in_sh, SH.PREFILL_RULES, flops)
+
+
 def build_decode(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
                  msr: float = 0.5, distributed_kv: bool = False,
                  decode_tp: bool = False) -> Workload:
@@ -202,4 +241,6 @@ def build_workload(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
         return build_train(cfg, shape, mesh, **kw)
     if shape.kind == "prefill":
         return build_prefill(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill_chunked":
+        return build_prefill_chunked(cfg, shape, mesh, **kw)
     return build_decode(cfg, shape, mesh, **kw)

@@ -133,36 +133,46 @@ def mla_out(params, cfg: ModelConfig, attn: jax.Array) -> jax.Array:
     return constrain(y @ params["wo"], "batch", None, "embed")
 
 
-def mla_absorbed_decode(params, cfg: ModelConfig, x: jax.Array,
-                        position: jax.Array, ckv_cache: jax.Array,
+def mla_absorbed_attend(params, cfg: ModelConfig, x: jax.Array,
+                        positions: jax.Array, ckv_cache: jax.Array,
                         kr_cache: jax.Array, valid: jax.Array) -> jax.Array:
-    """Weight-absorbed MLA decode (production path, DESIGN.md §2).
+    """Weight-absorbed MLA attention over a latent cache (DESIGN.md §2).
 
     Scores are computed directly in latent space — W_uk is absorbed into
-    the query and W_uv into the output projection, so the per-step cost
-    is O(S·(R+rope)·H) instead of decompressing S latents per head.
+    the query and W_uv into the output projection, so the cost is
+    O(Sq·S·(R+rope)·H) instead of decompressing S latents per head.
+    Serves both the single-token decode step (Sq=1) and the chunked
+    prefill's full-latent layers (Sq = chunk).
 
-    x (B,1,d); ckv_cache (B,S,R); kr_cache (B,1,S,rope); valid (B,S) bool.
-    Returns (B,1,d).
+    x (B,Sq,d); ckv_cache (B,S,R); kr_cache (B,1,S,rope);
+    valid (B,Sq,S) bool.  Returns (B,Sq,d).
     """
     B = x.shape[0]
     H, R = cfg.num_heads, cfg.kv_lora_rank
     nope, rope, dv = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
                       cfg.v_head_dim)
-    q, _ = mla_q(params, cfg, x, position)  # (B,H,1,nope+rope)
+    q, _ = mla_q(params, cfg, x, positions)  # (B,H,Sq,nope+rope)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     # Absorb W_uk: per head, w_uk (R, nope) ⇒ q_lat = q_nope @ w_uk^T (R,)
     w_ukv = params["w_ukv"].reshape(R, H, nope + dv)
     w_uk = w_ukv[:, :, :nope]   # (R,H,nope)
     w_uv = w_ukv[:, :, nope:]   # (R,H,dv)
-    q_lat = jnp.einsum("bhqn,rhn->bhqr", q_nope, w_uk)  # (B,H,1,R)
+    q_lat = jnp.einsum("bhqn,rhn->bhqr", q_nope, w_uk)  # (B,H,Sq,R)
     scores = jnp.einsum("bhqr,bsr->bhqs", q_lat, ckv_cache,
                         preferred_element_type=jnp.float32)
     scores += jnp.einsum("bhqe,bzse->bhqs", q_rope, kr_cache,
                          preferred_element_type=jnp.float32)
     scores *= (nope + rope) ** -0.5
-    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    scores = jnp.where(valid[:, None], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bhqs,bsr->bhqr", p.astype(ckv_cache.dtype), ckv_cache)
-    attn = jnp.einsum("bhqr,rhv->bhqv", ctx, w_uv)  # (B,H,1,dv)
+    attn = jnp.einsum("bhqr,rhv->bhqv", ctx, w_uv)  # (B,H,Sq,dv)
     return mla_out(params, cfg, attn)
+
+
+def mla_absorbed_decode(params, cfg: ModelConfig, x: jax.Array,
+                        position: jax.Array, ckv_cache: jax.Array,
+                        kr_cache: jax.Array, valid: jax.Array) -> jax.Array:
+    """Single-token absorbed decode: x (B,1,d), valid (B,S) → (B,1,d)."""
+    return mla_absorbed_attend(params, cfg, x, position, ckv_cache,
+                               kr_cache, valid[:, None, :])

@@ -211,8 +211,12 @@ def _route_and_attend(bp, cfg: ModelConfig, q, k, v, x_q, ctx,
         o_sa = M.attention(q, k, v, sa, q_offset=q_offset)
         rb = r[:, None, None, None].astype(o_fa.dtype)
         return rb * o_fa + (1 - rb) * o_sa, r
-    if kind == "hard":
-        r_hard, p_fa = R.hard_route(bp["router"], x_q, flux)
+    if kind in ("hard", "hard_prefix"):
+        # "hard_prefix" pools the prefix only — the chunk-invariant
+        # serving variant (router.pool_prefix); "hard" is the paper's
+        # prefix+suffix pooling over the full sequence.
+        pooling = "prefix" if kind == "hard_prefix" else "prefix_suffix"
+        r_hard, p_fa = R.hard_route(bp["router"], x_q, flux, pooling)
         # batch-consensus scalar decision (per-request when B=1; the
         # engine buckets requests by routing pattern otherwise)
         decision = (jnp.mean(p_fa) > 0.5).astype(jnp.int32)
@@ -436,6 +440,10 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, *,
     ``fixed_pattern``: (num_layers,) int array (1=FA, 0=SA) or None.
     ``routing_ctx="head_split"`` runs the DuoAttention-style baseline
     with ``head_split_n`` retrieval KV heads per layer.
+    ``routing_ctx="hard_prefix"`` is hard routing with prefix-only
+    pooling — decisions depend only on the first ``pool_size`` tokens,
+    so a chunked prefill routing on its first chunk reproduces them
+    exactly (DESIGN.md §Prefill pipeline).
     """
     B, Stok = tokens.shape
     enc_out = (encode(params, cfg, encoder_frames)
@@ -455,7 +463,7 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, *,
             return ("fa_only",)
         if routing_ctx == "fixed":
             return ("fixed", fixed_pattern[per_idx, pos])
-        return ("hard",)
+        return ("hard_prefix",) if routing_ctx == "hard_prefix" else ("hard",)
 
     h, rs, caches, auxes = _trunk_scan(params, cfg, h, positions,
                                        ctx_builder, enc_out=enc_out,
@@ -708,6 +716,127 @@ def decode_core(params, cfg: ModelConfig, token: jax.Array, caches: List,
                                                   fa_heads[i])
             else:
                 y, cache = _decode_attn_full(bp, cfg, x, pos, cache)
+            h = h + y
+            if "xattn" in bp and enc_out is not None:
+                hx = rms_norm(bp["norm_x"], h, cfg.norm_eps)
+                h = h + _cross_attention(bp["xattn"], cfg, hx, enc_out)
+        if has_ffn(cfg, i):
+            x2 = rms_norm(bp["norm2"], h, cfg.norm_eps)
+            if "moe" in bp:
+                y2, _ = MOE.moe_apply(bp["moe"], cfg, x2)
+            else:
+                y2 = ffn_apply(bp["ffn"], x2)
+            h = h + y2
+        new_caches.append(cache)
+    logits = logits_from_hidden(params, cfg, h[:, -1])
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Chunked cache-resident prefill (DESIGN.md §Prefill pipeline)
+#
+# Streams one prompt chunk through the trunk writing *directly into
+# decode-geometry caches*: ``full_insert_chunk`` at FA layers,
+# ``ring_insert_chunk`` at SA layers — peak live KV at SA layers is
+# bounded by the ring, not the prompt, and the monolithic
+# prefill→repack pass disappears from the hot path.  Like
+# ``decode_core``, per-layer behavior derives from the cache *type*
+# (ring ⇒ sink+local streaming, full/latent ⇒ full causal), so the
+# compiled executable is keyed by (cache geometry, chunk bucket) and
+# ``start`` stays traced — every chunk offset shares one executable.
+# ---------------------------------------------------------------------------
+
+def _chunk_attn_ring(bp, cfg: ModelConfig, x, positions, start, cache,
+                     sink: int, local: int):
+    """Chunk attention at a ring-cache layer: queries see the pre-insert
+    ring (explicit per-slot positions) plus the chunk's own keys under
+    the sink+local mask, then the chunk is ring-inserted.  Computing
+    attention *before* eviction is what makes chunks longer than the
+    ring exact: mid-chunk queries still see keys the insert is about to
+    overwrite."""
+    B, C, _ = x.shape
+    if isinstance(cache, KC.RingLatentKV):
+        ckv, kr = A.mla_latent(bp["attn"], cfg, x, positions)
+        q, _ = A.mla_q(bp["attn"], cfg, x, positions)
+        k_ctx, v_ctx = A.mla_expand_kv(bp["attn"], cfg, cache.ckv, cache.kr)
+        k_new, v_new = A.mla_expand_kv(bp["attn"], cfg, ckv, kr)
+    else:
+        q, k_new, v_new, _ = A.gqa_qkv(bp["attn"], cfg, x, positions)
+        k_ctx, v_ctx = cache.k, cache.v
+    kv_pos = jnp.concatenate(
+        [cache.positions, jnp.broadcast_to(positions, (B, C))], axis=1)
+    k_all = jnp.concatenate([k_ctx, k_new], axis=2)
+    v_all = jnp.concatenate([v_ctx, v_new], axis=2)
+    valid = M.streaming_valid(positions, kv_pos, sink, local)  # (B,C,L)
+    o = M.masked_attention(q, k_all, v_all, valid[:, None])
+    if isinstance(cache, KC.RingLatentKV):
+        cache = KC.ring_latent_insert_chunk(cache, ckv, kr, start, sink,
+                                            local)
+        return A.mla_out(bp["attn"], cfg, o), cache
+    cache = KC.ring_insert_chunk(cache, k_new, v_new, start, sink, local)
+    return A.gqa_out(bp["attn"], cfg, o), cache
+
+
+def _chunk_attn_full(bp, cfg: ModelConfig, x, positions, start, cache):
+    """Chunk attention at a full-cache layer: insert the chunk at
+    [start, start+C), then causal attention over the cache buffer via
+    the kv-blocked online softmax (``modes.chunk_causal_attention``) —
+    slots past the chunk hold zeros at positions > every query, and the
+    traced block trip count never visits them."""
+    B, C, _ = x.shape
+    if isinstance(cache, KC.LatentKV):
+        ckv, kr = A.mla_latent(bp["attn"], cfg, x, positions)
+        cache = KC.latent_insert_chunk(cache, ckv, kr, start)
+        Smax = cache.ckv.shape[1]
+        valid = jnp.arange(Smax)[None, None, :] <= positions[None, :, None]
+        y = A.mla_absorbed_attend(bp["attn"], cfg, x, positions, cache.ckv,
+                                  cache.kr,
+                                  jnp.broadcast_to(valid, (B, C, Smax)))
+        return y, cache
+    q, k_new, v_new, _ = A.gqa_qkv(bp["attn"], cfg, x, positions)
+    cache = KC.full_insert_chunk(cache, k_new, v_new, start)
+    # kv-blocked online softmax with a traced trip count: compute
+    # scales with the live prefix [0, start+C), not the buffer
+    o = M.chunk_causal_attention(q, cache.k, cache.v, start)
+    return A.gqa_out(bp["attn"], cfg, o), cache
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens: jax.Array, caches: List,
+                  start: jax.Array, enc_out=None):
+    """Stream one chunk of a chunked cache-resident prefill.
+
+    tokens (B, C) int32 — the chunk (static, bucketed length C);
+    ``start`` () int32 traced — its absolute offset; ``caches`` — the
+    decode-geometry cache list being filled (routing already frozen:
+    the pattern was fixed on the first chunk, §3.3).  Mamba layers
+    thread their SSD state / conv tail through the same cache slots.
+    Returns (last-token logits (B, V), updated caches).
+    """
+    B, C = tokens.shape
+    flux = cfg.flux
+    h = embed_tokens(params, cfg, tokens)
+    positions = start + jnp.arange(C)
+    new_caches = []
+    for i, kind in enumerate(cfg.layer_kinds):
+        bp = layer_params(params, cfg, i)
+        cache = caches[i]
+        x = rms_norm(bp["norm1"], h, cfg.norm_eps)
+        if kind == "mamba":
+            y, (hs, tail) = S.mamba_apply(bp["mamba"], cfg, x,
+                                          (cache.h, cache.conv_tail))
+            cache = KC.MambaCache(h=hs, conv_tail=tail)
+            h = h + y
+        else:
+            if isinstance(cache, (KC.RingKV, KC.RingLatentKV)):
+                sink = 0 if kind == "local" else flux.sink
+                ring = (cache.ckv.shape[1]
+                        if isinstance(cache, KC.RingLatentKV)
+                        else cache.k.shape[2])
+                y, cache = _chunk_attn_ring(bp, cfg, x, positions, start,
+                                            cache, sink, ring - sink)
+            else:
+                y, cache = _chunk_attn_full(bp, cfg, x, positions, start,
+                                            cache)
             h = h + y
             if "xattn" in bp and enc_out is not None:
                 hx = rms_norm(bp["norm_x"], h, cfg.norm_eps)

@@ -140,6 +140,7 @@ def mamba_apply(params, cfg: ModelConfig, x: jax.Array,
     chunked prefill.
     """
     B, S, _ = x.shape
+    W1 = cfg.ssm_conv_width - 1
     inner, N, nh = cfg.ssm_inner, cfg.ssm_state_dim, cfg.ssm_num_heads
     z, xBC, dt_raw = _split_proj(params, cfg, x)
     if state is not None and state[1] is not None:
@@ -147,6 +148,10 @@ def mamba_apply(params, cfg: ModelConfig, x: jax.Array,
         conv_full = _causal_conv(xBC_in, params["conv_w"], params["conv_b"])
         conv = conv_full[:, state[1].shape[1]:]
     else:
+        # left-pad with the conv's implicit zero history so the emitted
+        # tail is always (B, W-1, C), even for sequences shorter than
+        # the conv window (single-bucket chunks in the chunked prefill)
+        xBC_in = jnp.pad(xBC, ((0, 0), (W1, 0), (0, 0)))
         conv = _causal_conv(xBC, params["conv_w"], params["conv_b"])
     conv = jax.nn.silu(conv)
     xs = conv[..., :inner].reshape(B, S, nh, cfg.ssm_head_dim)
@@ -159,7 +164,7 @@ def mamba_apply(params, cfg: ModelConfig, x: jax.Array,
     y = y + (params["D"].astype(y.dtype)[:, None] * xs)
     y = y.reshape(B, S, inner)
     y = rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
-    conv_tail = xBC[:, -(cfg.ssm_conv_width - 1):]
+    conv_tail = xBC_in[:, -W1:] if W1 else xBC[:, :0]
     return y @ params["out_proj"], (h_final, conv_tail)
 
 

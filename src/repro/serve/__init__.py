@@ -1,11 +1,14 @@
 from repro.serve.engine import (  # noqa: F401
+    ChunkedPrefill,
     GenerationResult,
     KVStats,
     Request,
     ServeEngine,
+    chunk_plan,
     kv_cache_bytes,
     kv_cache_stats,
     repack_caches,
+    seed_caches,
     serve_batch,
 )
 from repro.serve import kv_cache  # noqa: F401

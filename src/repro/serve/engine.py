@@ -1,24 +1,29 @@
-"""Serving engine: prefill → route once → device-resident sparse decode.
+"""Serving engine: route on the first chunk → stream the rest into
+decode-geometry caches → device-resident sparse decode.
 
-Flow (paper §3.3 + DESIGN.md §Serving):
-  1. ``prefill`` runs the model over the prompt with *hard* routing; the
-     Layer Router fires exactly once per layer and the decision is
-     returned to the host.
-  2. ``repack_caches`` converts the full prefill KV into the per-layer
-     decode caches the routing pattern dictates: FA layers keep the
-     complete history, SA layers keep only the sink+local ring — the
-     paper's KV-cache reduction, realized structurally.
+Admission (paper §3.3 + DESIGN.md §Prefill pipeline) is a chunked,
+cache-resident pipeline:
+  1. The prompt is decomposed into bucketed chunks (``chunk_plan``).
+     The first chunk runs as a small monolithic prefill with
+     prefix-pooled hard routing — the Layer Router fires exactly once
+     per layer and the per-layer FA/SA pattern is frozen (§3.3).
+  2. Decode-geometry caches are allocated from the pattern and seeded
+     with the first chunk's KV (``seed_caches``); remaining chunks
+     stream through ``MD.prefill_chunk`` writing *directly* into them —
+     ``full_insert`` at FA layers, ``ring_insert`` at SA layers.  Peak
+     live KV at SA layers is bounded by the ring, not the prompt, and
+     no full-sequence KV is ever materialized or repacked.
   3. ``decode_many`` generates all requested tokens in ONE compiled
-     call: a ``lax.scan`` over decode steps with on-device sampling,
-     donated cache buffers (every append is an in-place
-     ``dynamic_update_slice``), and tokens synced to host once at the
-     end.  The compiled executable is keyed by the *cache geometry*
-     (which full/ring buffer shapes exist), not by the fa/sa routing
-     tuple — patterns sharing a geometry share an executable, and
-     ``ServeEngine`` asserts the jit cache stays O(#geometries).
+     call: a ``lax.scan`` over decode steps with on-device sampling and
+     donated cache buffers.  Every compiled artifact on the serving
+     path — seed, stream chunk, decode — is keyed by the *cache
+     geometry* (× chunk bucket for prefill), never by the fa/sa routing
+     tuple, and ``ServeEngine`` asserts those jit caches stay bounded.
 
-``sparse_decode=False`` reproduces the paper's non-shaded rows: routing
-affects prefill only and decode keeps full KV everywhere.
+``prefill_route_repack`` (full prefill → host-planned repack) remains
+as the fallback for cases the chunked path excludes — see its
+docstring.  ``sparse_decode=False`` reproduces the paper's non-shaded
+rows: routing affects prefill only and decode keeps full KV everywhere.
 """
 from __future__ import annotations
 
@@ -38,7 +43,89 @@ from repro.serve import kv_cache as KC
 
 
 # ---------------------------------------------------------------------------
-# Cache repacking
+# Chunk planning (host-side, static)
+# ---------------------------------------------------------------------------
+
+def chunk_plan(seq_len: int, chunk: int) -> List[Tuple[int, int]]:
+    """Decompose a prompt into bucketed chunks: [(start, size), ...].
+
+    Sizes are drawn from the static ladder {chunk} ∪ {2^k : 2^k < chunk},
+    largest first, covering ``seq_len`` *exactly* — padding is never an
+    option because padded tokens would be ring-inserted (corrupting
+    ``positions``) and would advance Mamba state with garbage.  The
+    ladder bounds compiled chunk executables at O(#geometries ×
+    #buckets) with #buckets ≤ log2(chunk)+2, the engine's guard budget.
+    """
+    if seq_len <= 0:
+        raise ValueError(f"chunk_plan: seq_len={seq_len} must be positive")
+    if chunk <= 0:
+        raise ValueError(f"chunk_plan: chunk={chunk} must be positive")
+    plan: List[Tuple[int, int]] = []
+    start = 0
+    while seq_len - start >= chunk:
+        plan.append((start, chunk))
+        start += chunk
+    rem = seq_len - start
+    if rem:
+        b = 1 << (rem.bit_length() - 1)  # largest power of two <= rem
+        while rem:
+            if b <= rem:
+                plan.append((start, b))
+                start += b
+                rem -= b
+            b >>= 1
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Chunk-0 seeding: first-chunk prefill KV → fresh decode-geometry caches
+# ---------------------------------------------------------------------------
+
+def seed_caches(cfg: ModelConfig, prefill_caches, pattern,
+                batch: int, max_len: int):
+    """Build decode-geometry caches for ``pattern`` and insert a
+    routing-chunk's per-layer KV (stacked per period position, as
+    ``MD.prefill`` returns it) at position 0 — one compiled call,
+    entirely device-side: the chunked replacement for the host-planned
+    gathers of ``repack_caches``.  ``pattern`` is static but fa/sa
+    patterns map 1:1 onto cache geometries, so the jit cache still
+    holds one entry per (geometry, first-chunk bucket)."""
+    caches = KC.init_decode_caches(cfg, pattern, batch, max_len)
+    flux = cfg.flux
+    P = MD.period_len(cfg)
+    start = jnp.int32(0)
+    out = []
+    for i, kind in enumerate(cfg.layer_kinds):
+        per, pos = divmod(i, P)
+        c = jax.tree.map(lambda a: a[per], prefill_caches[pos])
+        dec = caches[i]
+        if kind == "mamba":
+            h, tail = c
+            out.append(KC.MambaCache(h=h, conv_tail=tail))
+            continue
+        if cfg.use_mla:
+            ckv, kr = c
+            if isinstance(dec, KC.RingLatentKV):
+                ring = dec.ckv.shape[1]
+                sink = 0 if kind == "local" else flux.sink
+                out.append(KC.ring_latent_insert_chunk(
+                    dec, ckv, kr, start, sink, ring - sink))
+            else:
+                out.append(KC.latent_insert_chunk(dec, ckv, kr, start))
+            continue
+        k, v = c
+        if isinstance(dec, KC.RingKV):
+            ring = dec.k.shape[2]
+            sink = 0 if kind == "local" else flux.sink
+            out.append(KC.ring_insert_chunk(dec, k, v, start, sink,
+                                            ring - sink))
+        else:
+            out.append(KC.full_insert_chunk(dec, k, v, start))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cache repacking (monolithic fallback path)
 # ---------------------------------------------------------------------------
 
 def _ring_src(seq_len: int, sink: int, local: int, ring: int) -> np.ndarray:
@@ -63,6 +150,11 @@ def _gather_ring(k_full: jax.Array, src: np.ndarray, axis: int) -> jax.Array:
 def repack_caches(cfg: ModelConfig, prefill_caches, routing,
                   seq_len: int, max_len: int):
     """Prefill caches (stacked per period position) → decode cache list.
+
+    FALLBACK PATH: the chunked admission (``seed_caches`` + the
+    device-side chunk inserts in ``kv_cache``) replaced this in the
+    serving hot path — the host-planned ``_ring_src`` gather plans here
+    survive only for admissions ``chunked_eligible`` excludes.
 
     routing[i] ∈ {"fa","sa",("duo",n),None}; seq_len = prompt length
     (incl. any modality prefix); max_len = decode cache capacity for FA
@@ -200,6 +292,87 @@ def decode_executable_key(caches, pos, n_steps: int, greedy: bool,
 
 
 @dataclass
+class ChunkedPrefill:
+    """An in-flight route-then-stream admission (DESIGN.md §Prefill
+    pipeline).
+
+    ``step()`` processes exactly one chunk, so the continuous scheduler
+    can interleave prefill chunks with decode ticks (Sarathi-style
+    mixed ticks).  Step 0 is the *routing chunk*: a monolithic prefill
+    over the first bucket (the Layer Router fires once per layer,
+    prefix-pooled), then decode-geometry caches are allocated from the
+    frozen pattern and seeded with the chunk's KV.  Every further step
+    streams one bucketed chunk through ``MD.prefill_chunk`` directly
+    into those caches.  After ``done``, the results live in
+    ``pattern`` / ``caches`` / ``logits`` / ``p_fa``.
+    """
+    engine: "ServeEngine"
+    tokens: jax.Array                      # (B, S)
+    override: Optional[Tuple[Any, ...]]
+    plan: List[Tuple[int, int]]
+    idx: int = 0
+    dispatches: int = 0                    # compiled calls issued so far
+    pattern: Optional[Tuple[Any, ...]] = None
+    caches: Any = None
+    logits: Optional[jax.Array] = None
+    p_fa: Optional[np.ndarray] = None
+    _geom: Optional[Tuple] = None
+
+    @property
+    def seq_len(self) -> int:
+        return self.tokens.shape[1]
+
+    @property
+    def done(self) -> bool:
+        return self.idx >= len(self.plan)
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.plan)
+
+    def step(self) -> None:
+        """Process the next chunk (no-op when done)."""
+        if self.done:
+            return
+        eng = self.engine
+        start, size = self.plan[self.idx]
+        chunk = self.tokens[:, start:start + size]
+        if self.idx == 0:
+            self._route_chunk(chunk)
+        else:
+            eng._stream_keys.add((self._geom, size))
+            with warnings.catch_warnings():
+                warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+                self.logits, self.caches = eng._stream_chunk(
+                    params=eng.params, tokens=chunk, caches=self.caches,
+                    start=jnp.int32(start))
+            self.dispatches += 1
+        self.idx += 1
+
+    def _route_chunk(self, chunk: jax.Array) -> None:
+        eng, cfg = self.engine, self.engine.cfg
+        routing_ctx, fixed = eng._routing_ctx(self.override)
+        pf = eng._prefill(params=eng.params, tokens=chunk,
+                          routing_ctx=routing_ctx, fixed_pattern=fixed,
+                          prefix_embeddings=None, encoder_frames=None)
+        decisions = (np.asarray(pf.routing)
+                     if pf.routing is not None else None)
+        self.pattern = eng._pattern(decisions, self.override)
+        self.p_fa = None if pf.p_fa is None else np.asarray(pf.p_fa)
+        # geometry from abstract shapes only — the real buffers are
+        # built inside the seed jit (no eager per-admission allocs)
+        spec = jax.eval_shape(lambda: KC.init_decode_caches(
+            cfg, self.pattern, chunk.shape[0], eng.max_len))
+        self._geom = KC.cache_geometry(spec)
+        eng._seed_keys.add((self._geom, chunk.shape[1]))
+        self.caches = eng._seed_chunk(pf.caches, pattern=self.pattern,
+                                      batch=chunk.shape[0],
+                                      max_len=eng.max_len)
+        self.logits = pf.logits
+        self.dispatches += 2  # routing prefill + the seed insert
+
+
+@dataclass
 class GenerationResult:
     tokens: np.ndarray            # (B, n_steps)
     routing: Tuple[Any, ...]      # per-layer decode pattern
@@ -227,13 +400,24 @@ class ServeEngine:
 
     def __init__(self, params, cfg: ModelConfig, *, max_len: int = 4096,
                  sparse_decode: bool = True, routing_override=None,
-                 decode_attn=None, decode_unroll: int = 4):
+                 decode_attn=None, decode_unroll: int = 4,
+                 prefill_chunk: Optional[int] = 512,
+                 routing_pooling: str = "prefix"):
+        if routing_pooling not in ("prefix", "prefix_suffix"):
+            raise ValueError(
+                f"routing_pooling={routing_pooling!r}: expected 'prefix' "
+                f"(chunk-invariant serving default) or 'prefix_suffix' "
+                f"(the paper's pooling; forces the monolithic prefill)")
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
         self.sparse_decode = sparse_decode
         self.routing_override = routing_override
         self.decode_unroll = decode_unroll
+        # max chunk size of the chunked cache-resident prefill; None/0
+        # disables it (every admission takes the monolithic fallback)
+        self.prefill_chunk = int(prefill_chunk) if prefill_chunk else 0
+        self.routing_pooling = routing_pooling
         self._scheduler = None  # lazy ContinuousScheduler (submit/step)
         # optional decode-attention backend (e.g. the Pallas flash-decode
         # kernel via kernels.decode_attention.make_kernel_decode_attn);
@@ -241,12 +425,22 @@ class ServeEngine:
         self.decode_attn = decode_attn
         self.dispatch_count = 0           # compiled calls, engine lifetime
         self._decode_keys: set = set()    # expected decode executables
+        self._stream_keys: set = set()    # expected (geometry, bucket)
+        self._seed_keys: set = set()      # expected chunk-0 seeds
         self._prefill = jax.jit(partial(MD.prefill, cfg=cfg),
                                 static_argnames=("routing_ctx",))
+        # chunked-prefill executables: keyed by (cache geometry, chunk
+        # bucket) — ``start`` is traced, so every offset of a bucket
+        # shares one executable and the jit cache stays
+        # O(#geometries × #buckets), guard-asserted.
+        self._stream_chunk = jax.jit(partial(MD.prefill_chunk, cfg=cfg),
+                                     donate_argnames=("caches",))
+        self._seed_chunk = jax.jit(
+            partial(seed_caches, cfg),
+            static_argnames=("pattern", "batch", "max_len"))
         # repack is a long chain of tiny gathers/pads — eager dispatch
         # costs more than the math at serving rates, so compile it per
-        # (pattern, seq_len).  Admission-heavy continuous batching runs
-        # one of these per request.
+        # (pattern, seq_len).  Only the monolithic fallback runs it.
         self._repack = jax.jit(
             partial(repack_caches, cfg),
             static_argnames=("routing", "seq_len", "max_len"))
@@ -279,15 +473,39 @@ class ServeEngine:
                 pattern[i] = "fa" if int(decisions[j]) else "sa"
         return tuple(pattern)
 
+    def _routing_ctx(self, override=None):
+        """(routing_ctx, fixed_pattern) for an admission prefill.
+
+        No override → hard routing, pooled per ``routing_pooling``; an
+        override → the "fixed" context, so SA layers really run sparse
+        attention during prefill (the paper's prefill saving) instead of
+        full attention followed by a lossy ring truncation."""
+        cfg = self.cfg
+        override = (override if override is not None
+                    else self.routing_override)
+        if not (cfg.flux.enabled and cfg.routable_layers()):
+            return "fa_only", None
+        if override is None:
+            return ("hard" if self.routing_pooling == "prefix_suffix"
+                    else "hard_prefix"), None
+        fixed = jnp.asarray([0 if override[i] == "sa" else 1
+                             for i in range(cfg.num_layers)], jnp.int32)
+        return "fixed", fixed
+
     # -- jit-cache bookkeeping ---------------------------------------------
     def decode_cache_size(self) -> int:
         """Number of compiled decode executables held by this engine."""
         return self._decode_many._cache_size()
 
+    def prefill_chunk_cache_size(self) -> int:
+        """Compiled stream-chunk executables held by this engine."""
+        return self._stream_chunk._cache_size()
+
     def _check_executable_guard(self) -> None:
-        """The decode jit cache must stay O(#geometries) — one entry per
-        (cache geometry, n_steps, greedy) actually served — never
-        O(2^routable_layers) pattern-keyed entries."""
+        """Every serving-path jit cache must stay geometry-bounded —
+        decode at O(#geometries), the chunked-prefill stream and seed at
+        O(#geometries × #chunk-buckets) — never O(2^routable_layers)
+        pattern-keyed entries."""
         compiled, expected = self.decode_cache_size(), len(self._decode_keys)
         if compiled > expected:
             raise RuntimeError(
@@ -295,24 +513,89 @@ class ServeEngine:
                 f"{expected} (geometry, n_steps, sampling) keys — a "
                 f"routing-pattern-static argument has leaked into the "
                 f"decode jit signature")
+        for jitted, keys, name in (
+                (self._stream_chunk, self._stream_keys, "stream-chunk"),
+                (self._seed_chunk, self._seed_keys, "chunk-0 seed")):
+            compiled = jitted._cache_size()
+            if compiled > len(keys):
+                raise RuntimeError(
+                    f"{name} executable explosion: {compiled} compiled "
+                    f"for {len(keys)} (geometry, chunk-bucket) keys — a "
+                    f"non-bucketed chunk size or pattern-static argument "
+                    f"has leaked into the chunked-prefill jit signature")
 
-    # -- API -----------------------------------------------------------------
-    def prefill_route_repack(self, tokens: jax.Array, override=None, *,
-                             prefix_embeddings=None, encoder_frames=None):
-        """The shared admission chain: prefill (router fires once) →
-        per-request routing pattern → decode caches of the routed
-        geometry.  Both ``generate`` and the continuous-batching
-        scheduler go through this, so routing precedence can never
-        diverge between the two frontends.
-        Returns (pf, pattern, caches, seq_len)."""
+    # -- admission: chunked hot path --------------------------------------
+    def chunked_eligible(self, seq_len: int, override=None, *,
+                         prefix_embeddings=None,
+                         encoder_frames=None) -> bool:
+        """True when the chunked cache-resident admission can serve this
+        request; False routes it to the monolithic repack fallback."""
         cfg = self.cfg
+        if not self.prefill_chunk or seq_len <= 0:
+            return False
+        if (prefix_embeddings is not None or encoder_frames is not None
+                or cfg.num_encoder_layers or cfg.num_prefix_tokens):
+            return False  # modality side inputs ride the monolithic path
         override = (override if override is not None
                     else self.routing_override)
-        routing_ctx = "hard" if (cfg.flux.enabled
-                                 and override is None
-                                 and cfg.routable_layers()) else "fa_only"
+        if override is not None and any(isinstance(p, tuple)
+                                        for p in override):
+            return False  # duo head-splits keep the repack path
+        routable = bool(cfg.flux.enabled and cfg.routable_layers())
+        if routable and override is None:
+            if not self.sparse_decode:
+                # decisions would diverge from geometry (the ablation
+                # rows where SA prefill feeds a full decode cache)
+                return False
+            if self.routing_pooling != "prefix":
+                return False  # paper pooling needs the full sequence
+            if (chunk_plan(seq_len, self.prefill_chunk)[0][1]
+                    < min(cfg.flux.pool_size, seq_len)):
+                return False  # first chunk can't cover the router pool
+        needs_sa = routable and (override is None
+                                 or any(p == "sa" for p in override))
+        if needs_sa and cfg.flux.sa_mode != "ssa":
+            return False  # xa/ta prefill has no ring-resident equivalent
+        return True
+
+    def start_chunked_prefill(self, tokens: jax.Array,
+                              override=None) -> ChunkedPrefill:
+        """Begin a route-then-stream admission; the caller drives
+        ``job.step()`` (the continuous scheduler interleaves steps with
+        decode ticks; ``prefill_chunked`` runs them back-to-back)."""
+        tokens = jnp.asarray(tokens)
+        return ChunkedPrefill(
+            engine=self, tokens=tokens,
+            override=(override if override is not None
+                      else self.routing_override),
+            plan=chunk_plan(tokens.shape[1], self.prefill_chunk))
+
+    def prefill_chunked(self, tokens: jax.Array,
+                        override=None) -> ChunkedPrefill:
+        """The chunked admission run to completion.  Returns the
+        finished job (``pattern``/``caches``/``logits``/``p_fa``)."""
+        job = self.start_chunked_prefill(tokens, override)
+        while not job.done:
+            job.step()
+        return job
+
+    # -- admission: monolithic fallback ------------------------------------
+    def prefill_route_repack(self, tokens: jax.Array, override=None, *,
+                             prefix_embeddings=None, encoder_frames=None):
+        """Monolithic admission FALLBACK: full-sequence prefill (router
+        fires once) → per-request pattern → host-planned repack into
+        decode geometry.  The hot path is ``prefill_chunked``; this
+        path materializes O(S) KV at every layer and is retained only
+        for what the chunked pipeline excludes (``chunked_eligible``):
+        ``routing_ctx="hard"`` soft-metric runs needing the paper's
+        prefix+suffix pooling / full-sequence p_fa, modality side
+        inputs, duo head-split overrides, and non-ssa SA modes.
+        Returns (pf, pattern, caches, seq_len)."""
+        override = (override if override is not None
+                    else self.routing_override)
+        routing_ctx, fixed = self._routing_ctx(override)
         pf = self._prefill(params=self.params, tokens=tokens,
-                           routing_ctx=routing_ctx,
+                           routing_ctx=routing_ctx, fixed_pattern=fixed,
                            prefix_embeddings=prefix_embeddings,
                            encoder_frames=encoder_frames)
         decisions = (np.asarray(pf.routing)
@@ -320,6 +603,19 @@ class ServeEngine:
         pattern = self._pattern(decisions, override)
         seq_len = tokens.shape[1] + (prefix_embeddings.shape[1]
                                      if prefix_embeddings is not None else 0)
+        if seq_len > self.max_len:
+            # fail here, loudly, instead of at repack trace depth: ring
+            # layers truncate long prompts structurally but full-cache
+            # layers cannot hold them at all.
+            off = [i for i, k in enumerate(self.cfg.layer_kinds)
+                   if k == "attn" and pattern[i] != "sa"]
+            if off:
+                raise ValueError(
+                    f"prefill_route_repack: prompt length seq_len="
+                    f"{seq_len} exceeds the decode cache capacity "
+                    f"max_len={self.max_len} at full-cache layer "
+                    f"{off[0]}; raise the engine's max_len or truncate "
+                    f"the prompt")
         caches = self._repack(pf.caches, routing=pattern,
                               seq_len=seq_len, max_len=self.max_len)
         return pf, pattern, caches, seq_len
@@ -330,15 +626,41 @@ class ServeEngine:
                  routing_override=None) -> GenerationResult:
         cfg = self.cfg
         tokens = jnp.asarray(tokens)
+        seq_len = tokens.shape[1] + (prefix_embeddings.shape[1]
+                                     if prefix_embeddings is not None else 0)
+        if seq_len > self.max_len:
+            raise ValueError(
+                f"generate: prompt length {seq_len} exceeds the engine's "
+                f"cache capacity max_len={self.max_len}; raise max_len "
+                f"or truncate the prompt")
         dispatches = 0
         enc_out = None
         if self._encode is not None:
             enc_out = self._encode(params=self.params, frames=encoder_frames)
             dispatches += 1
-        pf, pattern, caches, seq_len = self.prefill_route_repack(
-            tokens, routing_override, prefix_embeddings=prefix_embeddings,
-            encoder_frames=encoder_frames)
-        dispatches += 2  # prefill + the jitted repack
+        if self.chunked_eligible(seq_len, routing_override,
+                                 prefix_embeddings=prefix_embeddings,
+                                 encoder_frames=encoder_frames):
+            job = self.prefill_chunked(tokens, routing_override)
+            pattern, caches = job.pattern, job.caches
+            logits, p_fa = job.logits, job.p_fa
+            dispatches += job.dispatches
+        else:
+            pf, pattern, caches, seq_len = self.prefill_route_repack(
+                tokens, routing_override,
+                prefix_embeddings=prefix_embeddings,
+                encoder_frames=encoder_frames)
+            logits = pf.logits
+            p_fa = None if pf.p_fa is None else np.asarray(pf.p_fa)
+            dispatches += 2  # prefill + the jitted repack
+        if (seq_len + n_steps > self.max_len
+                and any(isinstance(c, (KC.FullKV, KC.LatentKV))
+                        for c in caches)):
+            raise ValueError(
+                f"generate: prompt ({seq_len}) + n_steps ({n_steps}) = "
+                f"{seq_len + n_steps} exceeds the cache capacity "
+                f"max_len={self.max_len}; full-cache layers would "
+                f"silently clamp decode appends")
         kv_bytes = kv_cache_bytes(caches)
 
         greedy = bool(greedy or rng is None)
@@ -355,7 +677,7 @@ class ServeEngine:
             # (CPU tests) — harmless, silence the per-call warning
             warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
             toks, _, _ = self._decode_many(
-                params=self.params, logits=pf.logits, caches=caches,
+                params=self.params, logits=logits, caches=caches,
                 pos=pos, rng=rng, n_steps=n_steps,
                 greedy=greedy, enc_out=enc_out, fa_heads=fa_heads,
                 duo_layers=duo_layers, unroll=self.decode_unroll)
@@ -368,8 +690,7 @@ class ServeEngine:
         return GenerationResult(
             tokens=np.asarray(toks), routing=pattern,
             msr=msr_val, kv_bytes=kv_bytes,
-            p_fa=None if pf.p_fa is None else np.asarray(pf.p_fa),
-            dispatches=dispatches)
+            p_fa=p_fa, dispatches=dispatches)
 
     # -- continuous-batching (streaming) frontend ---------------------------
     def scheduler(self, **kw):

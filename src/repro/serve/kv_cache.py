@@ -163,6 +163,95 @@ def latent_insert(cache: LatentKV, ckv_new: jax.Array, kr_new: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Multi-token (chunk) inserts — the chunked cache-resident prefill path
+# (DESIGN.md §Prefill pipeline) appends a whole prompt chunk per call.
+# ``start`` is a traced scalar (chunks at different offsets share one
+# executable); the chunk length C is static (bucketed by the engine).
+# ---------------------------------------------------------------------------
+
+def _ring_chunk_sources(start: jax.Array, C: int, sink: int, local: int
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Ring occupancy after inserting positions [start, start+C).
+
+    Computes, per buffer slot, the *latest* inserted position that lands
+    in it (a chunk longer than ``local`` wraps: earlier chunk tokens are
+    evicted by later ones within the same insert).  Returns
+    (src (ring,), pos (ring,), valid (ring,)): the chunk index to gather
+    from, the absolute position it carries, and whether the slot is
+    written at all (False = keep the old occupant).
+    """
+    ring = sink + local
+    s = jnp.arange(ring)
+    e = start + C - 1  # last inserted position
+    # sink slots hold position == slot, written iff start <= s <= e
+    sink_valid = (s < sink) & (s >= start) & (s <= e)
+    # local slot s holds the largest p <= e with p ≡ s-sink (mod local),
+    # provided that p is inside the chunk and past the sink region
+    r = s - sink
+    q = e - sink
+    p = sink + q - jnp.mod(q - r, local)
+    loc_valid = (s >= sink) & (e >= sink) & (p >= start) & (p >= sink)
+    src = jnp.where(s < sink, s, p) - start
+    pos = jnp.where(s < sink, s, p)
+    valid = jnp.where(s < sink, sink_valid, loc_valid)
+    return src, pos.astype(jnp.int32), valid
+
+
+def _ring_chunk_positions(cache_positions: jax.Array, pos: jax.Array,
+                          valid: jax.Array) -> jax.Array:
+    return jnp.where(valid[None, :], pos[None, :], cache_positions)
+
+
+def ring_insert_chunk(cache: RingKV, k_new: jax.Array, v_new: jax.Array,
+                      start: jax.Array, sink: int, local: int) -> RingKV:
+    """Insert C tokens (uniform across rows) at [start, start+C)."""
+    C = k_new.shape[2]
+    src, pos, valid = _ring_chunk_sources(start, C, sink, local)
+    idx = jnp.clip(src, 0, C - 1)
+    m = valid[None, None, :, None]
+    k = jnp.where(m, jnp.take(k_new, idx, axis=2), cache.k)
+    v = jnp.where(m, jnp.take(v_new, idx, axis=2), cache.v)
+    return RingKV(
+        k=k, v=v,
+        positions=_ring_chunk_positions(cache.positions, pos, valid),
+        length=_lengths(cache, start + C - 1))
+
+
+def ring_latent_insert_chunk(cache: RingLatentKV, ckv_new: jax.Array,
+                             kr_new: jax.Array, start: jax.Array,
+                             sink: int, local: int) -> RingLatentKV:
+    C = ckv_new.shape[1]
+    src, pos, valid = _ring_chunk_sources(start, C, sink, local)
+    idx = jnp.clip(src, 0, C - 1)
+    ckv = jnp.where(valid[None, :, None],
+                    jnp.take(ckv_new, idx, axis=1), cache.ckv)
+    kr = jnp.where(valid[None, None, :, None],
+                   jnp.take(kr_new, idx, axis=2), cache.kr)
+    return RingLatentKV(
+        ckv=ckv, kr=kr,
+        positions=_ring_chunk_positions(cache.positions, pos, valid),
+        length=_lengths(cache, start + C - 1))
+
+
+def full_insert_chunk(cache: FullKV, k_new: jax.Array, v_new: jax.Array,
+                      start: jax.Array) -> FullKV:
+    C = k_new.shape[2]
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, start, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, start, axis=2)
+    return FullKV(k=k, v=v, length=_lengths(cache, start + C - 1))
+
+
+def latent_insert_chunk(cache: LatentKV, ckv_new: jax.Array,
+                        kr_new: jax.Array, start: jax.Array) -> LatentKV:
+    C = ckv_new.shape[1]
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache.ckv, ckv_new, start,
+                                              axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache.kr, kr_new, start,
+                                             axis=2)
+    return LatentKV(ckv=ckv, kr=kr, length=_lengths(cache, start + C - 1))
+
+
+# ---------------------------------------------------------------------------
 # Construction
 # ---------------------------------------------------------------------------
 

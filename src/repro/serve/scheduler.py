@@ -5,13 +5,21 @@ buckets by exact (length, n_steps) and runs buckets to completion —
 mixed-length traffic serializes.  This scheduler instead keeps a
 persistent decode batch that requests join and leave per step:
 
-  admit   — prefill a waiting request at B=1 (the Layer Router fires
-            once, per request), repack its caches, and pack it into a
-            free slot of the pool matching its *cache geometry*.
+  admit   — stream a waiting request's prompt through the chunked
+            cache-resident prefill at B=1 (the Layer Router fires once
+            per request, on the first chunk), then pack its decode
+            caches into a free slot of the pool matching its *cache
+            geometry*.  Prefill chunks are SCHEDULABLE TICK WORK: at
+            most ``prefill_chunks_per_tick`` chunks run per tick,
+            interleaved with the decode chunks below (Sarathi-style
+            mixed ticks), so a long prompt cannot stall the resident
+            batch and TTFT of running requests stays fair under load.
             Geometry-bucketed admission is the Flux-specific twist: the
             decode executable is keyed by geometry (PR 1), so mixing
             geometries in one pool would force recompiles — grouping
             by geometry preserves the O(#geometries) guarantee.
+            Requests ``chunked_eligible`` excludes (duo overrides,
+            non-ssa SA) admit through the monolithic repack fallback.
   step    — per tick, run ONE compiled ``decode_many`` chunk (default
             8 steps) for every pool with active slots: chunked scans,
             not run-to-completion, so new arrivals wait at most one
@@ -40,7 +48,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve import kv_cache as KC
-from repro.serve.engine import _trim_eos, decode_executable_key
+from repro.serve.engine import (KVStats, _trim_eos, decode_executable_key,
+                                kv_cache_stats)
 from repro.serve.slots import SlotPool
 
 
@@ -54,10 +63,31 @@ class RequestMetrics:
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     preemptions: int = 0
+    # queue-time vs prefill-time split: [prefill_start_t, prefill_done_t]
+    # brackets the chunked prefill of the admission that finally landed
+    # (reset on preemption), so a TTFT regression is attributable to
+    # waiting vs prefilling.
+    prefill_start_t: Optional[float] = None
+    prefill_done_t: Optional[float] = None
+    # decode-cache footprint at admission (payload/overhead split)
+    kv_stats: Optional[KVStats] = None
 
     @property
     def queue_delay(self) -> float:
         return (self.admitted_t or self.arrival_t) - self.arrival_t
+
+    @property
+    def prefill_time(self) -> float:
+        """Wall-clock spent streaming this request's prefill chunks."""
+        if self.prefill_start_t is None or self.prefill_done_t is None:
+            return 0.0
+        return self.prefill_done_t - self.prefill_start_t
+
+    @property
+    def slot_wait(self) -> float:
+        """Queue delay net of prefill: time spent purely waiting (for a
+        tick's prefill budget or a free slot)."""
+        return max(self.queue_delay - self.prefill_time, 0.0)
 
     @property
     def ttft(self) -> float:
@@ -89,9 +119,15 @@ class _InFlight:
     pattern: Optional[Tuple[Any, ...]] = None
     pool_key: Optional[Tuple] = None
     slot: int = -1
-    # geometry bucket seen at the last failed admission — lets the
-    # scheduler skip re-prefilling a request whose bucket is still full
-    # (tokens don't change while waiting, so the routing is stable)
+    # in-flight chunked prefill (engine.ChunkedPrefill); advanced by the
+    # tick's prefill budget, packed into a slot once done.  A finished
+    # job whose bucket is full simply waits — its caches are already
+    # decode-geometry, nothing is recomputed.
+    job: Optional[Any] = None
+    # geometry bucket seen at the last failed MONOLITHIC admission —
+    # lets the scheduler skip re-prefilling a fallback request whose
+    # bucket is still full (tokens don't change while waiting, so the
+    # routing is stable)
     cached_key: Optional[Tuple] = None
 
 
@@ -100,20 +136,30 @@ class ContinuousScheduler:
 
     ``slots_per_bucket``: capacity of each geometry bucket's pool.
     ``chunk``: decode steps per tick per pool — the scheduling quantum.
+    ``prefill_chunks_per_tick``: prefill chunks streamed per tick across
+    all in-flight admissions — the prefill scheduling quantum.
     ``clock``: injectable time source (tests pass a virtual clock).
     """
 
     def __init__(self, engine, *, slots_per_bucket: int = 4,
-                 chunk: int = 8,
+                 chunk: int = 8, prefill_chunks_per_tick: int = 1,
                  clock: Callable[[], float] = time.monotonic):
         if engine.cfg.num_encoder_layers or engine.cfg.num_prefix_tokens:
             raise ValueError(
                 "continuous batching supports decoder-only text requests; "
                 "encoder/prefix modalities carry per-request side inputs "
                 "the slot pool does not hold yet")
+        if prefill_chunks_per_tick < 1:
+            raise ValueError(
+                f"prefill_chunks_per_tick={prefill_chunks_per_tick} must "
+                f"be >= 1: with a zero budget a chunked-eligible request "
+                f"can never admit (its prefill job never advances).  To "
+                f"disable mixed ticks, build the engine with "
+                f"prefill_chunk=None instead")
         self.engine = engine
         self.slots_per_bucket = int(slots_per_bucket)
         self.chunk = int(chunk)
+        self.prefill_chunks_per_tick = int(prefill_chunks_per_tick)
         self.clock = clock
         self.waiting: List[_InFlight] = []
         self.pools: Dict[Tuple, SlotPool] = {}
@@ -121,10 +167,17 @@ class ContinuousScheduler:
         self._rng = jax.random.key(0)
         self.ticks = 0
         self.tokens_generated = 0
+        self.prefill_chunk_ticks = 0  # prefill chunks streamed, lifetime
 
     # -- submission --------------------------------------------------------
     def submit(self, req) -> int:
         """Queue a request (``serve.Request``); returns its rid."""
+        if len(req.tokens) > self.engine.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.tokens)} "
+                f"exceeds the engine's cache capacity max_len="
+                f"{self.engine.max_len}; raise max_len or truncate the "
+                f"prompt")
         need = len(req.tokens) + req.n_steps
         if need > self.engine.max_len:
             raise ValueError(
@@ -150,18 +203,58 @@ class ContinuousScheduler:
     def _has_victim(self, pool: SlotPool, priority: int) -> bool:
         return any(v.req.priority < priority for v in pool.active.values())
 
+    def _prefill_work(self, pending: List[_InFlight]) -> None:
+        """Stream up to ``prefill_chunks_per_tick`` chunks across the
+        waiting requests' admission jobs, priority-then-arrival order —
+        prefill is tick work on equal footing with decode chunks."""
+        eng = self.engine
+        budget = self.prefill_chunks_per_tick
+        for inf in pending:
+            if budget <= 0:
+                break
+            if inf.job is None:
+                tokens = self._prefill_tokens(inf)
+                if not eng.chunked_eligible(
+                        len(tokens),
+                        getattr(inf.req, "routing_override", None)):
+                    continue  # monolithic fallback admits in _admit
+                inf.job = eng.start_chunked_prefill(
+                    jnp.asarray(tokens)[None],
+                    getattr(inf.req, "routing_override", None))
+                inf.metrics.prefill_start_t = self.clock()
+            while budget > 0 and not inf.job.done:
+                inf.job.step()
+                self.prefill_chunk_ticks += 1
+                budget -= 1
+            if inf.job.done and inf.metrics.prefill_done_t is None:
+                inf.metrics.prefill_done_t = self.clock()
+
     def _admit(self, inf: _InFlight) -> bool:
         eng = self.engine
-        if inf.cached_key is not None:
-            known = self.pools.get(inf.cached_key)
-            if (known is not None and not known.free
-                    and not self._has_victim(known, inf.req.priority)):
-                return False  # bucket still full — skip the re-prefill
-        tokens = self._prefill_tokens(inf)
-        pf, pattern, caches, seq_len = eng.prefill_route_repack(
-            jnp.asarray(tokens)[None],
-            getattr(inf.req, "routing_override", None))
-        eng.dispatch_count += 2  # prefill + the jitted repack
+        if inf.job is not None:
+            # chunked admission: pack only once the stream finished
+            if not inf.job.done:
+                return False
+            pattern, caches = inf.job.pattern, inf.job.caches
+            logits, seq_len = inf.job.logits, inf.job.seq_len
+        elif eng.chunked_eligible(len(self._prefill_tokens(inf)),
+                                  getattr(inf.req, "routing_override",
+                                          None)):
+            # chunked-eligible but this tick's prefill budget ran out
+            # before its job started — wait, don't fall back
+            return False
+        else:
+            if inf.cached_key is not None:
+                known = self.pools.get(inf.cached_key)
+                if (known is not None and not known.free
+                        and not self._has_victim(known, inf.req.priority)):
+                    return False  # bucket still full — skip the re-prefill
+            tokens = self._prefill_tokens(inf)
+            pf, pattern, caches, seq_len = eng.prefill_route_repack(
+                jnp.asarray(tokens)[None],
+                getattr(inf.req, "routing_override", None))
+            logits = pf.logits
+            eng.dispatch_count += 2  # prefill + the jitted repack
         if any(isinstance(p, tuple) for p in pattern):
             raise ValueError(
                 "duo head-split patterns carry traced per-layer state the "
@@ -170,11 +263,11 @@ class ContinuousScheduler:
         pool = self.pools.get(key)
         if pool is None:
             pool = SlotPool.create(eng.cfg, pattern, self.slots_per_bucket,
-                                   eng.max_len, pf.logits)
+                                   eng.max_len, logits)
             if KC.slot_geometry(pool.caches) != key:
                 raise AssertionError(
                     "init_decode_caches geometry diverged from "
-                    "repack_caches geometry for one pattern")
+                    "admission cache geometry for one pattern")
             self.pools[key] = pool
         if pool.free:
             slot = pool.free.pop()
@@ -186,11 +279,15 @@ class ContinuousScheduler:
         now = self.clock()
         if inf.metrics.admitted_t is None:
             inf.metrics.admitted_t = now
+        inf.metrics.kv_stats = kv_cache_stats(caches)
         inf.pattern, inf.pool_key, inf.slot = pattern, key, slot
         inf.cached_key = None
         pool.patterns_served.add(pattern)
-        pool.write(slot, caches, pf.logits, seq_len)
+        pool.write(slot, caches, logits, seq_len)
         pool.active[slot] = inf
+        if inf.job is not None:
+            eng.dispatch_count += inf.job.dispatches
+            inf.job = None
         return True
 
     def _preempt(self, pool: SlotPool, priority: int) -> Optional[int]:
@@ -205,13 +302,18 @@ class ContinuousScheduler:
         victim.metrics.preemptions += 1
         victim.slot, victim.pool_key = -1, None
         victim.cached_key = None  # its tokens grew; routing may change
+        victim.job = None         # recompute prefill over prompt+generated
+        # re-bracket the prefill split around the admission that lands
+        victim.metrics.prefill_start_t = None
+        victim.metrics.prefill_done_t = None
         self.waiting.append(victim)
         return slot
 
     # -- one scheduling tick -----------------------------------------------
     def tick(self) -> List[FinishedRequest]:
-        """Admit waiting requests, decode one chunk per bucket, retire
-        finished slots.  Returns the requests that finished this tick."""
+        """Stream prefill chunks, admit finished admissions, decode one
+        chunk per bucket, retire finished slots.  Returns the requests
+        that finished this tick."""
         eng = self.engine
         self.ticks += 1
         # admit in priority order, oldest first within a priority.
@@ -219,6 +321,7 @@ class ContinuousScheduler:
         # iterate a snapshot and let victims wait for the next tick.
         pending = sorted(self.waiting, key=lambda i: (-i.req.priority,
                                                       i.metrics.arrival_t))
+        self._prefill_work(pending)
         self.waiting = []
         for inf in pending:
             if not self._admit(inf):
@@ -270,10 +373,11 @@ class ContinuousScheduler:
         guard = 0
         while self.waiting or any(p.active for p in self.pools.values()):
             before = (self.tokens_generated, self.n_active(),
-                      len(self.finished))
+                      len(self.finished), self.prefill_chunk_ticks)
             self.tick()
             progressed = before != (self.tokens_generated, self.n_active(),
-                                    len(self.finished))
+                                    len(self.finished),
+                                    self.prefill_chunk_ticks)
             guard = 0 if progressed else guard + 1
             if guard > 10_000:
                 raise RuntimeError(

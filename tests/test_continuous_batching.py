@@ -126,7 +126,11 @@ def test_executable_guard_across_preemption_churn():
     patterns = _patterns3(cfg)
     rng = np.random.default_rng(4)
     eng = ServeEngine(params, cfg, max_len=64)
-    sched = eng.scheduler(slots_per_bucket=1, chunk=2)
+    # a prefill budget that admits a whole wave within its submission
+    # tick: chunk-paced admission otherwise lets high-priority arrivals
+    # admit *before* lower-priority slots exist, and nothing preempts
+    sched = eng.scheduler(slots_per_bucket=1, chunk=2,
+                          prefill_chunks_per_tick=12)
     rid = itertools.count()
     done = {}
     # staggered submission: every tick injects a higher-priority request
@@ -164,7 +168,10 @@ def test_preempted_request_output_is_unchanged():
     sched = eng.scheduler(slots_per_bucket=1, chunk=2)
     eng.submit(Request(rid=0, tokens=t_low, n_steps=10,
                        routing_override=sa, priority=0))
-    sched.tick()  # rid 0 decodes its first chunk, then gets evicted
+    # admission is chunk-paced now: tick until rid 0 is resident and has
+    # decoded its first chunk, then let the high-priority arrival evict it
+    while not sched.n_active():
+        sched.tick()
     eng.submit(Request(rid=1, tokens=t_high, n_steps=4,
                        routing_override=sa, priority=9))
     out = sched.drain()

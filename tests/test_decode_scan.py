@@ -15,7 +15,7 @@ import pytest
 from repro.configs import get_config, smoke_variant
 from repro.kernels.decode_attention import make_kernel_decode_attn
 from repro.models import model as MD
-from repro.serve import ServeEngine, repack_caches
+from repro.serve import ServeEngine
 
 B, S, N = 2, 24, 5
 
@@ -34,14 +34,10 @@ def _loop_generate(eng, cfg, params, toks, n_steps, *, greedy=True,
                    rng=None):
     """The seed's per-step host loop: sample on device, sync the token,
     dispatch one decode jit per step.  Reference for bitwise equality
-    with the fused scan."""
-    pf = eng._prefill(params=params, tokens=jnp.asarray(toks),
-                      routing_ctx="hard", prefix_embeddings=None,
-                      encoder_frames=None)
-    decisions = np.asarray(pf.routing) if pf.routing is not None else None
-    pattern = eng._pattern(decisions)
-    caches = repack_caches(cfg, pf.caches, pattern, S, eng.max_len)
-    logits = pf.logits
+    with the fused scan — admission goes through the engine's own
+    pipeline so only the decode strategy differs."""
+    job = eng.prefill_chunked(jnp.asarray(toks))
+    pattern, caches, logits = job.pattern, job.caches, job.logits
     out, pos = [], S
     for _ in range(n_steps):
         if greedy or rng is None:
@@ -84,9 +80,12 @@ def test_generate_is_constant_dispatch():
     mid = eng.dispatch_count
     gen_long = eng.generate(toks, 32)
     after = eng.dispatch_count
-    assert gen_short.dispatches == gen_long.dispatches == 3
-    # prefill + jitted repack + one decode scan
-    assert mid - before == after - mid == 3
+    # routing chunk + seed + per-chunk streams + one decode scan; the
+    # count depends on the prompt's chunk plan, never on n_steps
+    from repro.serve import chunk_plan
+    expect = 2 + (len(chunk_plan(S, eng.prefill_chunk)) - 1) + 1
+    assert gen_short.dispatches == gen_long.dispatches == expect
+    assert mid - before == after - mid == expect
 
 
 def test_same_geometry_patterns_share_one_executable():

@@ -1,0 +1,358 @@
+"""Chunked cache-resident prefill (DESIGN.md §Prefill pipeline).
+
+The load-bearing guarantees of the route-then-stream admission:
+  1. chunk-size invariance: for every arch family and every chunk size
+     (single bucket, prime vs pow2, chunk > S) the chunked pipeline
+     produces *identical routing decisions*, allclose last-token
+     logits, and bitwise-equal greedy continuations vs the monolithic
+     prefill→repack path;
+  2. SA-layer peak live KV is bounded by the ring geometry during a
+     long chunked prefill — never by the prompt length;
+  3. chunked-prefill executables stay O(#geometries × #chunk-buckets);
+  4. over-length prompts are rejected up front with actionable errors;
+  5. the multi-token cache inserts are exactly equivalent to loops of
+     single-token inserts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.models import model as MD
+from repro.serve import (ContinuousScheduler, Request, ServeEngine,
+                         chunk_plan, kv_cache)
+from repro.serve.engine import kv_cache_stats
+
+ARCHS = ["phi3-mini-3.8b", "jamba-1.5-large-398b", "deepseek-v2-236b"]
+B, S, N = 2, 48, 6
+
+
+def _setup(arch):
+    cfg = smoke_variant(get_config(arch))
+    params = MD.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    return cfg, params, toks
+
+
+def _sa_pattern(cfg):
+    return tuple("sa" if k == "attn" else None for k in cfg.layer_kinds)
+
+
+def _mixed_pattern(cfg):
+    flip, out = True, []
+    for k in cfg.layer_kinds:
+        out.append(("fa" if flip else "sa") if k == "attn" else None)
+        flip = not flip if k == "attn" else flip
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Chunk plan
+# ---------------------------------------------------------------------------
+
+def test_chunk_plan_exact_cover_and_bucketed():
+    for seq_len in (1, 7, 16, 48, 100, 513):
+        for chunk in (1, 8, 13, 16, 512):
+            plan = chunk_plan(seq_len, chunk)
+            # exact, contiguous, no padding
+            assert plan[0][0] == 0
+            assert all(plan[i][0] + plan[i][1] == plan[i + 1][0]
+                       for i in range(len(plan) - 1))
+            assert plan[-1][0] + plan[-1][1] == seq_len
+            # sizes drawn from the static ladder {chunk} ∪ {2^k < chunk}
+            for _, size in plan:
+                assert size == chunk or (size < chunk
+                                         and size & (size - 1) == 0)
+
+
+def test_chunk_plan_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        chunk_plan(0, 16)
+    with pytest.raises(ValueError):
+        chunk_plan(16, 0)
+
+
+# ---------------------------------------------------------------------------
+# Multi-token insert exactness (chunk insert == loop of single inserts)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("start,C", [(0, 4), (0, 12), (6, 7), (2, 1),
+                                     (9, 17)])
+def test_ring_insert_chunk_matches_sequential(start, C):
+    rng = np.random.default_rng(0)
+    Bq, Hkv, D, sink, local = 2, 2, 4, 3, 5
+    ring = sink + local
+    cache = kv_cache.RingKV(
+        k=jnp.zeros((Bq, Hkv, ring, D)), v=jnp.zeros((Bq, Hkv, ring, D)),
+        positions=jnp.full((Bq, ring), -1, jnp.int32),
+        length=jnp.zeros((Bq,), jnp.int32))
+    for p in range(start):  # pre-fill history [0, start)
+        kn = jnp.asarray(rng.normal(size=(Bq, Hkv, 1, D)))
+        cache = kv_cache.ring_insert(cache, kn, kn, jnp.int32(p), sink,
+                                     local)
+    knew = jnp.asarray(rng.normal(size=(Bq, Hkv, C, D)))
+    ref = cache
+    for j in range(C):
+        ref = kv_cache.ring_insert(ref, knew[:, :, j:j + 1],
+                                   knew[:, :, j:j + 1],
+                                   jnp.int32(start + j), sink, local)
+    got = kv_cache.ring_insert_chunk(cache, knew, knew, jnp.int32(start),
+                                     sink, local)
+    assert np.array_equal(ref.positions, got.positions)
+    assert np.array_equal(ref.length, got.length)
+    assert np.allclose(ref.k, got.k) and np.allclose(ref.v, got.v)
+
+
+@pytest.mark.parametrize("start,C", [(0, 4), (5, 9), (3, 2)])
+def test_ring_latent_insert_chunk_matches_sequential(start, C):
+    rng = np.random.default_rng(1)
+    Bq, R, rope, sink, local = 2, 6, 4, 3, 5
+    ring = sink + local
+    cache = kv_cache.RingLatentKV(
+        ckv=jnp.zeros((Bq, ring, R)), kr=jnp.zeros((Bq, 1, ring, rope)),
+        positions=jnp.full((Bq, ring), -1, jnp.int32),
+        length=jnp.zeros((Bq,), jnp.int32))
+    for p in range(start):
+        cn = jnp.asarray(rng.normal(size=(Bq, 1, R)))
+        krn = jnp.asarray(rng.normal(size=(Bq, 1, 1, rope)))
+        cache = kv_cache.ring_latent_insert(cache, cn, krn, jnp.int32(p),
+                                            sink, local)
+    cnew = jnp.asarray(rng.normal(size=(Bq, C, R)))
+    krnew = jnp.asarray(rng.normal(size=(Bq, 1, C, rope)))
+    ref = cache
+    for j in range(C):
+        ref = kv_cache.ring_latent_insert(ref, cnew[:, j:j + 1],
+                                          krnew[:, :, j:j + 1],
+                                          jnp.int32(start + j), sink, local)
+    got = kv_cache.ring_latent_insert_chunk(cache, cnew, krnew,
+                                            jnp.int32(start), sink, local)
+    assert np.array_equal(ref.positions, got.positions)
+    assert np.allclose(ref.ckv, got.ckv) and np.allclose(ref.kr, got.kr)
+
+
+def test_full_insert_chunk_matches_sequential():
+    rng = np.random.default_rng(2)
+    Bq, Hkv, D, Smax, start, C = 2, 2, 4, 16, 3, 5
+    cache = kv_cache.FullKV(
+        k=jnp.zeros((Bq, Hkv, Smax, D)), v=jnp.zeros((Bq, Hkv, Smax, D)),
+        length=jnp.zeros((Bq,), jnp.int32))
+    knew = jnp.asarray(rng.normal(size=(Bq, Hkv, C, D)))
+    ref = cache
+    for j in range(C):
+        ref = kv_cache.full_insert(ref, knew[:, :, j:j + 1],
+                                   knew[:, :, j:j + 1], jnp.int32(start + j))
+    got = kv_cache.full_insert_chunk(cache, knew, knew, jnp.int32(start))
+    assert np.array_equal(ref.length, got.length)
+    assert np.allclose(ref.k, got.k) and np.allclose(ref.v, got.v)
+
+
+# ---------------------------------------------------------------------------
+# Chunk-size invariance vs the monolithic path
+# ---------------------------------------------------------------------------
+
+# 16 = one ladder bucket (divides S); 13 = prime (ragged tail ladder,
+# exercises 1-token chunks through Mamba/conv state); 64 > S.
+CHUNKS = [16, 13, 64]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_chunked_matches_monolithic_routed(arch, chunk):
+    """Router-driven admission: identical decisions, allclose logits,
+    bitwise-equal greedy continuation vs prefill→repack."""
+    cfg, params, toks = _setup(arch)
+    ref_eng = ServeEngine(params, cfg, max_len=S + 16, prefill_chunk=None)
+    pf, pattern, _, _ = ref_eng.prefill_route_repack(toks)
+    ref = ref_eng.generate(toks, N)
+    eng = ServeEngine(params, cfg, max_len=S + 16, prefill_chunk=chunk)
+    job = eng.prefill_chunked(toks)
+    assert job.pattern == pattern
+    scale = float(jnp.abs(pf.logits).max()) + 1e-6
+    assert float(jnp.abs(job.logits - pf.logits).max()) / scale < 2e-4
+    gen = eng.generate(toks, N)
+    assert gen.routing == ref.routing
+    assert np.array_equal(gen.tokens, ref.tokens)
+    eng._check_executable_guard()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_chunked_matches_monolithic_override(arch, chunk):
+    """Fixed-pattern admission (mixed FA/SA geometry) matches the
+    monolithic path bitwise on greedy continuations."""
+    cfg, params, toks = _setup(arch)
+    ov = _mixed_pattern(cfg)
+    ref = ServeEngine(params, cfg, max_len=S + 16, prefill_chunk=None,
+                      routing_override=ov).generate(toks, N)
+    eng = ServeEngine(params, cfg, max_len=S + 16, prefill_chunk=chunk,
+                      routing_override=ov)
+    gen = eng.generate(toks, N)
+    assert gen.routing == ref.routing
+    assert np.array_equal(gen.tokens, ref.tokens)
+
+
+# ---------------------------------------------------------------------------
+# SA-layer peak KV is ring-bounded, not prompt-bounded
+# ---------------------------------------------------------------------------
+
+def test_sa_peak_kv_bounded_by_ring_during_chunked_prefill():
+    cfg, params, _ = _setup("phi3-mini-3.8b")
+    ring = cfg.flux.sink + cfg.flux.local
+    max_len = 256
+    payloads = {}
+    for seq in (96, 224):
+        toks = jax.random.randint(jax.random.key(3), (1, seq), 0,
+                                  cfg.vocab_size)
+        eng = ServeEngine(params, cfg, max_len=max_len, prefill_chunk=16,
+                          routing_override=_sa_pattern(cfg))
+        job = eng.start_chunked_prefill(toks)
+        sa_bytes = []
+        while not job.done:
+            job.step()
+            # every live cache buffer at an SA layer is ring-sized —
+            # the prompt length never appears in an SA-layer shape
+            for i, kind in enumerate(cfg.layer_kinds):
+                if kind != "attn":
+                    continue
+                c = job.caches[i]
+                assert isinstance(c,
+                                  (kv_cache.RingKV, kv_cache.RingLatentKV))
+                L = (c.ckv.shape[1]
+                     if isinstance(c, kv_cache.RingLatentKV)
+                     else c.k.shape[2])
+                assert L == min(ring, max_len)
+            sa_bytes.append(sum(
+                kv_cache_stats([job.caches[i]]).payload_bytes
+                for i, k in enumerate(cfg.layer_kinds) if k == "attn"))
+        assert len(set(sa_bytes)) == 1  # flat across the whole stream
+        payloads[seq] = sa_bytes[0]
+    # identical footprint for a 96- and a 224-token prompt
+    assert payloads[96] == payloads[224]
+
+
+# ---------------------------------------------------------------------------
+# Executable accounting
+# ---------------------------------------------------------------------------
+
+def test_prefill_executables_bounded_by_buckets():
+    """Many prompt lengths, one geometry → stream executables stay
+    ≤ #buckets actually used, and the engine guard holds."""
+    cfg, params, _ = _setup("phi3-mini-3.8b")
+    eng = ServeEngine(params, cfg, max_len=96, prefill_chunk=16,
+                      routing_override=_sa_pattern(cfg))
+    buckets = set()
+    for seq in (17, 23, 48, 64, 80):
+        toks = jax.random.randint(jax.random.key(seq), (1, seq), 0,
+                                  cfg.vocab_size)
+        eng.generate(toks, 2)
+        buckets |= {size for _, size in chunk_plan(seq, 16)}
+    assert eng.prefill_chunk_cache_size() <= len(buckets)
+    eng._check_executable_guard()
+
+
+def test_executable_guard_trips_on_unbucketed_chunk():
+    """A stream executable the engine never registered must raise."""
+    cfg, params, toks = _setup("phi3-mini-3.8b")
+    eng = ServeEngine(params, cfg, max_len=S + 16, prefill_chunk=16)
+    eng.generate(toks, 2)
+    job = eng.prefill_chunked(toks)
+    # bypass the key bookkeeping with a rogue un-bucketed chunk size
+    rogue = jax.random.randint(jax.random.key(9), (B, 5), 0,
+                               cfg.vocab_size)
+    eng._stream_chunk(params=eng.params, tokens=rogue, caches=job.caches,
+                      start=jnp.int32(S))
+    with pytest.raises(RuntimeError, match="stream-chunk executable"):
+        eng._check_executable_guard()
+
+
+# ---------------------------------------------------------------------------
+# Up-front rejection of over-length prompts
+# ---------------------------------------------------------------------------
+
+def test_generate_rejects_overlong_prompt_up_front():
+    cfg, params, _ = _setup("phi3-mini-3.8b")
+    eng = ServeEngine(params, cfg, max_len=32)
+    toks = np.zeros((1, 40), np.int32)
+    with pytest.raises(ValueError, match=r"40.*max_len=32"):
+        eng.generate(toks, 2)
+    assert eng.dispatch_count == 0  # rejected before any compiled call
+
+
+def test_submit_rejects_overlong_prompt_up_front():
+    cfg, params, _ = _setup("phi3-mini-3.8b")
+    eng = ServeEngine(params, cfg, max_len=32)
+    with pytest.raises(ValueError, match=r"40.*max_len=32"):
+        eng.submit(Request(rid=0, tokens=np.zeros(40, np.int32),
+                           n_steps=1))
+
+
+def test_repack_fallback_rejects_overlong_prompt_before_repack():
+    """The monolithic fallback raises at admission depth (naming length
+    and limit), not inside the jitted repack trace."""
+    cfg, params, _ = _setup("phi3-mini-3.8b")
+    eng = ServeEngine(params, cfg, max_len=32, prefill_chunk=None)
+    fa = tuple("fa" if k == "attn" else None for k in cfg.layer_kinds)
+    toks = jnp.zeros((1, 40), jnp.int32)
+    with pytest.raises(ValueError, match=r"seq_len=40.*max_len=32"):
+        eng.prefill_route_repack(toks, fa)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler integration: prefill chunks as tick work
+# ---------------------------------------------------------------------------
+
+def test_scheduler_chunked_admission_bitwise_and_metrics():
+    cfg, params, _ = _setup("phi3-mini-3.8b")
+    rng = np.random.default_rng(4)
+    lens = (24, 33, 17)
+    reqs = [Request(rid=i, tokens=rng.integers(
+        0, cfg.vocab_size, size=lens[i]).astype(np.int32), n_steps=5)
+        for i in range(len(lens))]
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=8)
+    eng.scheduler(slots_per_bucket=2, chunk=4)
+    for r in reqs:
+        eng.submit(r)
+    out = eng.drain()
+    sched = eng.scheduler()
+    assert sched.prefill_chunk_ticks == sum(
+        len(chunk_plan(n, 8)) for n in lens)
+    ref = ServeEngine(params, cfg, max_len=64, prefill_chunk=8)
+    for r in reqs:
+        gen = ref.generate(r.tokens[None], r.n_steps)
+        assert np.array_equal(out[r.rid].tokens, gen.tokens[0]), r.rid
+        m = out[r.rid].metrics
+        assert m.kv_stats is not None and m.kv_stats.payload_bytes > 0
+        assert m.prefill_done_t is not None
+        assert m.prefill_time >= 0 and m.slot_wait >= 0
+        assert abs(m.queue_delay - (m.prefill_time + m.slot_wait)) < 1e-6
+    eng._check_executable_guard()
+
+
+def test_scheduler_interleaves_decode_with_long_prefill():
+    """Sarathi-style mixed ticks: a resident request keeps emitting
+    tokens while a long prompt's prefill streams chunk-by-chunk."""
+    cfg, params, _ = _setup("phi3-mini-3.8b")
+    rng = np.random.default_rng(7)
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=8)
+    sched = eng.scheduler(slots_per_bucket=2, chunk=2, clock=clock)
+    short = Request(rid=0, tokens=rng.integers(
+        0, cfg.vocab_size, size=16).astype(np.int32), n_steps=10)
+    eng.submit(short)
+    while not sched.n_active():
+        sched.tick()
+    long = Request(rid=1, tokens=rng.integers(
+        0, cfg.vocab_size, size=41).astype(np.int32), n_steps=2)
+    eng.submit(long)
+    out = eng.drain()
+    m0, m1 = out[0].metrics, out[1].metrics
+    # the short request produced tokens while the long prompt was still
+    # streaming its prefill chunks
+    assert m0.first_token_t < m1.prefill_done_t
+    assert m1.prefill_time > 0

@@ -43,6 +43,17 @@ def test_workload_lowers(arch, kind):
     assert terms["t_compute_s"] >= 0
 
 
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b",
+                                  "jamba-1.5-large-398b",
+                                  "deepseek-v2-236b"])
+def test_prefill_chunked_workload_lowers(arch):
+    cfg = smoke_variant(get_config(arch))
+    shape = InputShape("pc", 64, 2, "prefill_chunked")
+    compiled, hlo = _lower(cfg, shape, chunk=16)
+    terms = HA.roofline_terms(compiled, hlo, 1)
+    assert terms["hlo_flops_per_chip"] > 0
+
+
 def test_decode_variants_lower():
     cfg = smoke_variant(get_config("phi3-mini-3.8b"))
     _lower(cfg, SMALL["decode"], decode_tp=True)
