@@ -12,9 +12,9 @@ from benchmarks import (bench_continued_training,  # noqa: E402
                         bench_continuous_batching, bench_data_balance,
                         bench_decode_speedup, bench_head_vs_layer,
                         bench_longbench_proxy, bench_prefill_speedup,
-                        bench_router_overhead, bench_ruler_proxy,
-                        bench_sparsity_sweep, bench_target_sparsity,
-                        roofline)
+                        bench_prefix_cache, bench_router_overhead,
+                        bench_ruler_proxy, bench_sparsity_sweep,
+                        bench_target_sparsity, roofline)
 
 BENCHES = [
     ("Table1/LongBench-E", bench_longbench_proxy),
@@ -28,6 +28,7 @@ BENCHES = [
     ("Fig9/router-overhead", bench_router_overhead),
     ("Serving/decode-speedup", bench_decode_speedup),
     ("Serving/continuous-batching", bench_continuous_batching),
+    ("Serving/prefix-cache", bench_prefix_cache),
     ("Roofline", roofline),
 ]
 

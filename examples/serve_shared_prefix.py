@@ -1,0 +1,86 @@
+"""Shared-prefix serving demo: every request opens with the same
+system prompt, and the radix prefix cache turns all but the first
+admission into O(unique suffix) work.
+
+The first request streams its whole prompt through the chunked
+prefill, publishing a snapshot of the full per-layer cache state at
+every chunk boundary it crosses.  Later requests longest-prefix-match
+the radix tree, restore the deepest snapshot (one compiled copy), and
+stream only their unique suffix — the shared system prompt never runs
+through the model again.  Because the snapshot carries ring positions
+and Mamba state, hit-path continuations are *bitwise* identical to
+cold admissions (asserted below).
+
+    PYTHONPATH=src python examples/serve_shared_prefix.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config, smoke_variant  # noqa: E402
+from repro.models import model as MD  # noqa: E402
+from repro.serve import Request, ServeEngine  # noqa: E402
+
+CHUNK = 16
+SYSTEM_PROMPT_CHUNKS = 3  # 48 shared tokens ≈ 75% of every prompt
+
+
+def main() -> None:
+    cfg = smoke_variant(get_config("phi3-mini-3.8b"))
+    params = MD.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+
+    system = rng.integers(0, cfg.vocab_size,
+                          size=SYSTEM_PROMPT_CHUNKS * CHUNK
+                          ).astype(np.int32)
+    reqs = [Request(rid=rid,
+                    tokens=np.concatenate([
+                        system,
+                        rng.integers(0, cfg.vocab_size, size=CHUNK
+                                     ).astype(np.int32)]),
+                    n_steps=8)
+            for rid in range(6)]
+
+    def serve(name: str, eng: ServeEngine) -> dict:
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.time()
+        out = eng.drain()
+        s = out.summary
+        print(f"[{name:12s}] {s['n_requests']} requests in "
+              f"{time.time() - t0:5.2f}s | ttft p50 "
+              f"{s['ttft_p50_s'] * 1e3:6.1f}ms | warm prompt tokens "
+              f"{s['prefix_hit_tokens']}/{s['prompt_tokens']} "
+              f"({s['prefix_hit_fraction']:.0%}) | store device="
+              f"{s['prefix_device_bytes']}B host={s['prefix_host_bytes']}B")
+        return {r: out[r].tokens for r in out}
+
+    cold = serve("cold", ServeEngine(params, cfg, max_len=96,
+                                     prefill_chunk=CHUNK))
+    eng = ServeEngine(params, cfg, max_len=96, prefill_chunk=CHUNK,
+                      prefix_cache_mb=64, prefix_cache_host_mb=64)
+    serve("warming", eng)   # first drain builds the radix tree
+    warm = serve("warm", eng)
+
+    st = eng.prefix_store.stats()
+    print(f"store: {st.hits} hits / {st.misses} misses, "
+          f"{st.hit_tokens} prompt tokens served from snapshots, "
+          f"{st.snapshots} snapshots over {st.nodes} radix nodes")
+    assert all(np.array_equal(cold[r], warm[r]) for r in cold)
+    print("hit-path continuations are bitwise-equal to cold admissions")
+
+    # host offload: park every snapshot in CPU memory, serve again —
+    # hits prefetch back and stay exact
+    eng.prefix_store.offload_all()
+    again = serve("host-tier", eng)
+    assert all(np.array_equal(cold[r], again[r]) for r in cold)
+    print("after evict-to-host, hits prefetch back bitwise-equal")
+
+
+if __name__ == "__main__":
+    main()

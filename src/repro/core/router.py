@@ -94,6 +94,36 @@ def hard_route(params: Dict[str, jax.Array], x_q: jax.Array,
     return (logits[:, 0] > logits[:, 1]).astype(jnp.int32), p_fa
 
 
+def prefix_routing_reusable(flux: FluxConfig, prefix_len: int,
+                            seq_len: int, *, pooling: str = "prefix",
+                            routable: bool = True) -> bool:
+    """Can a routing decision taken on one prompt transfer *exactly* to
+    another prompt sharing its first ``prefix_len`` tokens?
+
+    This is the routing-compatibility check behind shared-prefix
+    snapshot reuse (serve/prefix_cache.py).  Hard routing with
+    prefix-only pooling depends on the first ``pool_size`` tokens of
+    each layer's query tensor and nothing else, so two prompts agree
+    iff both pool windows lie inside the shared prefix:
+
+      * ``prefix_len >= pool_size`` — the publisher's decision was
+        computed entirely from tokens the matcher also has;
+      * ``seq_len >= pool_size`` — the matcher's own (hypothetical)
+        pool window is the same ``pool_size`` tokens; a shorter prompt
+        pools ``min(pool_size, S)`` tokens and may decide differently.
+
+    Prefix+suffix pooling (the paper's default) reads the prompt tail,
+    so its decisions are never prefix-transferable.  When the model has
+    no routed layers (``routable=False``) there is no decision to
+    disagree on and reuse is always exact.
+    """
+    if not routable:
+        return True
+    if pooling != "prefix":
+        return False
+    return prefix_len >= flux.pool_size and seq_len >= flux.pool_size
+
+
 def anneal_tau(flux: FluxConfig, step, total_steps: int) -> jax.Array:
     """Linear temperature decay (paper §3.1)."""
     frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)

@@ -25,6 +25,9 @@ from repro.train import checkpoint
 def _requests(cfg, args) -> list:
     gen = SyntheticTasks(cfg.vocab_size, seed=0)
     rng = np.random.default_rng(0)
+    shared = (rng.integers(0, cfg.vocab_size,
+                           size=args.shared_prefix).astype(np.int32)
+              if args.shared_prefix else None)
     reqs = []
     for rid in range(args.requests):
         task = "needle" if rid % 2 == 0 else "markov"
@@ -33,8 +36,13 @@ def _requests(cfg, args) -> list:
         plen = (args.prompt_len if not args.continuous
                 else args.prompt_len // (1 + rid % 3))
         b = gen.batch(rng, task, 1, max(plen, 16))
-        reqs.append(Request(rid=rid, tokens=b.tokens[0],
-                            n_steps=args.gen_len))
+        toks = b.tokens[0]
+        if shared is not None:
+            # shared-system-prompt traffic: every request opens with the
+            # same preamble — the prefix-cache hit path's home turf
+            toks = np.concatenate([shared, toks]).astype(np.int32)
+        reqs.append(Request(rid=rid, tokens=toks, n_steps=args.gen_len,
+                            prefix_reuse=not args.no_prefix_reuse))
     return reqs
 
 
@@ -68,6 +76,15 @@ def _serve_continuous(engine: ServeEngine, reqs, args) -> None:
           f"({total / wall:.0f} tok/s) | geometries={sched.n_geometries()} "
           f"decode_executables={engine.decode_cache_size()} "
           f"ticks={sched.ticks}")
+    if engine.prefix_store is not None:
+        s = engine.prefix_store.stats()
+        hit = sum(done[r].metrics.prefix_hit_tokens for r in done)
+        prompt = sum(done[r].metrics.prompt_len for r in done)
+        print(f"prefix cache: {s.hits} hits / {s.misses} misses | "
+              f"{hit}/{prompt} prompt tokens warm "
+              f"({hit / max(prompt, 1):.0%}) | "
+              f"device={s.device_bytes} B host={s.host_bytes} B "
+              f"snapshots={s.snapshots}")
 
 
 def main() -> None:
@@ -89,6 +106,22 @@ def main() -> None:
                     help="decode steps per scheduler tick")
     ap.add_argument("--mean-gap", type=float, default=0.02,
                     help="mean Poisson interarrival gap (s)")
+    ap.add_argument("--prefill-chunk", type=int, default=512,
+                    help="max chunk of the chunked cache-resident "
+                         "prefill (prefix snapshots land at multiples "
+                         "of this; 0 = monolithic admission)")
+    ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                    help="device byte budget (MB) for the shared-prefix "
+                         "snapshot store; 0 disables prefix reuse")
+    ap.add_argument("--prefix-cache-host-mb", type=float, default=0.0,
+                    help="host offload tier budget (MB): evicted "
+                         "snapshots demote to CPU instead of dropping")
+    ap.add_argument("--no-prefix-reuse", action="store_true",
+                    help="submit requests opted out of prefix reuse "
+                         "(store stays configured but untouched)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a shared system prompt of this many "
+                         "tokens to every request")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -100,8 +133,12 @@ def main() -> None:
 
     reqs = _requests(cfg, args)
     engine = ServeEngine(params, cfg,
-                         max_len=args.prompt_len + args.gen_len + 8,
-                         sparse_decode=not args.dense)
+                         max_len=(args.prompt_len + args.shared_prefix
+                                  + args.gen_len + 8),
+                         sparse_decode=not args.dense,
+                         prefill_chunk=args.prefill_chunk or None,
+                         prefix_cache_mb=args.prefix_cache_mb or None,
+                         prefix_cache_host_mb=args.prefix_cache_host_mb)
     if args.continuous:
         _serve_continuous(engine, reqs, args)
         return

@@ -853,6 +853,20 @@ def prefill_chunk(params, cfg: ModelConfig, tokens: jax.Array, caches: List,
     return logits, new_caches
 
 
+def snapshot_state(caches, logits: jax.Array):
+    """Bitwise copy of a chunk-boundary admission state — the per-layer
+    decode-geometry cache pytree plus the boundary's last-token logits
+    — into fresh buffers.  This is the snapshot the shared-prefix radix
+    cache stores and restores (serve/prefix_cache.py): the chunked
+    prefill and decode jits *donate* their cache buffers, so a snapshot
+    must not alias them.  ``jnp.copy`` rather than an arithmetic
+    identity: ``x + 0`` would flip ``-0.0`` sign bits and break the
+    bitwise-exact reuse guarantee.  Under jit this compiles to one
+    executable per cache geometry (the engine's restore jit, counted by
+    its executable guard)."""
+    return jax.tree.map(jnp.copy, caches), jnp.copy(logits)
+
+
 def routing_head_split(cfg: ModelConfig, routing):
     """Translate a routing pattern into (fa_heads, duo_layers):
     the traced per-layer full-KV-head counts and the *static* tuple of

@@ -1,5 +1,6 @@
 from repro.serve.engine import (  # noqa: F401
     ChunkedPrefill,
+    DrainResult,
     GenerationResult,
     KVStats,
     Request,
@@ -12,6 +13,11 @@ from repro.serve.engine import (  # noqa: F401
     serve_batch,
 )
 from repro.serve import kv_cache  # noqa: F401
+from repro.serve.prefix_cache import (  # noqa: F401
+    PrefixStore,
+    PrefixStoreStats,
+    Snapshot,
+)
 from repro.serve.scheduler import (  # noqa: F401
     ContinuousScheduler,
     FinishedRequest,

@@ -38,8 +38,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+# module (not name) import: core.router itself imports models.layers,
+# whose package chain loads repro.serve — a name import here would trip
+# that cycle at interpreter start
+from repro.core import router as RT
 from repro.models import model as MD
 from repro.serve import kv_cache as KC
+from repro.serve import prefix_cache as PXC
 
 
 # ---------------------------------------------------------------------------
@@ -243,16 +248,22 @@ class KVStats:
     """Decode-cache footprint, split the way the paper counts it:
     ``payload_bytes`` is the KV (or SSM-state) tensors the routing
     decision actually shrinks; ``overhead_bytes`` is bookkeeping
-    (``positions``/``length``) that exists for every geometry alike."""
+    (``positions``/``length``) that exists for every geometry alike.
+    ``prefix_device_bytes``/``prefix_host_bytes`` report the
+    shared-prefix snapshot store's occupancy per tier alongside —
+    the store holds whole boundary states, so its bytes are neither
+    payload nor overhead of any live request."""
     payload_bytes: int
     overhead_bytes: int
+    prefix_device_bytes: int = 0
+    prefix_host_bytes: int = 0
 
     @property
     def total_bytes(self) -> int:
         return self.payload_bytes + self.overhead_bytes
 
 
-def kv_cache_stats(caches) -> KVStats:
+def kv_cache_stats(caches, prefix_store=None) -> KVStats:
     payload = overhead = 0
     for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
         name = getattr(path[-1], "name", None) if path else None
@@ -261,7 +272,12 @@ def kv_cache_stats(caches) -> KVStats:
             overhead += nbytes
         else:
             payload += nbytes
-    return KVStats(payload_bytes=payload, overhead_bytes=overhead)
+    pd = ph = 0
+    if prefix_store is not None:
+        pd = prefix_store.device_bytes
+        ph = prefix_store.host_bytes
+    return KVStats(payload_bytes=payload, overhead_bytes=overhead,
+                   prefix_device_bytes=pd, prefix_host_bytes=ph)
 
 
 def kv_cache_bytes(caches) -> int:
@@ -305,6 +321,13 @@ class ChunkedPrefill:
     streams one bucketed chunk through ``MD.prefill_chunk`` directly
     into those caches.  After ``done``, the results live in
     ``pattern`` / ``caches`` / ``logits`` / ``p_fa``.
+
+    Shared-prefix reuse (DESIGN.md §Prefix cache): when the engine has
+    a prefix store and ``reuse`` holds, the job starts from the deepest
+    matching chunk-boundary snapshot (``prefix_hit_tokens`` covered
+    tokens skip straight past their chunks — no prefill work is issued
+    for them) and publishes a new snapshot at every full-chunk boundary
+    it streams, so the store warms as a side effect of serving.
     """
     engine: "ServeEngine"
     tokens: jax.Array                      # (B, S)
@@ -316,6 +339,10 @@ class ChunkedPrefill:
     caches: Any = None
     logits: Optional[jax.Array] = None
     p_fa: Optional[np.ndarray] = None
+    reuse: bool = True                     # participate in the prefix store
+    prefix_hit_tokens: int = 0             # prompt tokens seeded from a hit
+    chunks_streamed: int = 0               # chunks actually computed
+    published: int = 0                     # boundary snapshots published
     _geom: Optional[Tuple] = None
 
     @property
@@ -347,7 +374,9 @@ class ChunkedPrefill:
                     params=eng.params, tokens=chunk, caches=self.caches,
                     start=jnp.int32(start))
             self.dispatches += 1
+        self.chunks_streamed += 1
         self.idx += 1
+        eng._maybe_publish(self, start, size)
 
     def _route_chunk(self, chunk: jax.Array) -> None:
         eng, cfg = self.engine, self.engine.cfg
@@ -380,6 +409,17 @@ class GenerationResult:
     kv_bytes: int                 # decode-cache footprint
     p_fa: Optional[np.ndarray] = None
     dispatches: int = 0           # compiled calls issued for this request
+    prefix_hit_tokens: int = 0    # prompt tokens served from a warm prefix
+
+
+class DrainResult(dict):
+    """``{rid: FinishedRequest}`` plus an aggregate ``summary`` dict
+    (TTFT split percentiles, prefix hit accounting, and the
+    KV/prefix-store occupancy split from ``kv_cache_stats``)."""
+
+    def __init__(self, finished, summary: Dict[str, Any]):
+        super().__init__(finished)
+        self.summary = summary
 
 
 class ServeEngine:
@@ -402,7 +442,9 @@ class ServeEngine:
                  sparse_decode: bool = True, routing_override=None,
                  decode_attn=None, decode_unroll: int = 4,
                  prefill_chunk: Optional[int] = 512,
-                 routing_pooling: str = "prefix"):
+                 routing_pooling: str = "prefix",
+                 prefix_cache_mb: Optional[float] = None,
+                 prefix_cache_host_mb: float = 0.0):
         if routing_pooling not in ("prefix", "prefix_suffix"):
             raise ValueError(
                 f"routing_pooling={routing_pooling!r}: expected 'prefix' "
@@ -418,6 +460,10 @@ class ServeEngine:
         # disables it (every admission takes the monolithic fallback)
         self.prefill_chunk = int(prefill_chunk) if prefill_chunk else 0
         self.routing_pooling = routing_pooling
+        # shared-prefix radix cache: snapshots at chunk boundaries,
+        # device budget prefix_cache_mb (+ optional host offload tier)
+        self.prefix_store = self._build_prefix_store(
+            prefix_cache_mb, prefix_cache_host_mb)
         self._scheduler = None  # lazy ContinuousScheduler (submit/step)
         # optional decode-attention backend (e.g. the Pallas flash-decode
         # kernel via kernels.decode_attention.make_kernel_decode_attn);
@@ -448,8 +494,64 @@ class ServeEngine:
             partial(MD.decode_many, cfg=cfg),
             static_argnames=("n_steps", "greedy", "duo_layers", "unroll"),
             donate_argnames=("caches",))
+        # prefix-snapshot copy: one executable per cache geometry,
+        # shared between publication (copy before the next chunk
+        # donates the live buffers) and restore (copy so a hit never
+        # hands the store's own buffers to a donating jit).  The
+        # partial wrapper gives each engine its own jit cache — bare
+        # ``jax.jit(MD.snapshot_state)`` would share one across
+        # engines and break per-engine executable accounting.
+        self._snapshot = jax.jit(partial(MD.snapshot_state))
+        self._snap_keys: set = set()      # expected snapshot geometries
+        self._snap_skip_warned: set = set()
         self._encode = (jax.jit(partial(MD.encode, cfg=cfg))
                         if cfg.num_encoder_layers else None)
+
+    def _build_prefix_store(self, prefix_cache_mb,
+                            prefix_cache_host_mb) -> Optional[PXC.PrefixStore]:
+        if not prefix_cache_mb:
+            return None
+        cfg = self.cfg
+        if not self.prefill_chunk:
+            raise ValueError(
+                f"prefix_cache_mb={prefix_cache_mb:g} requires the chunked "
+                f"prefill: prefix snapshots are chunk-boundary objects and "
+                f"the monolithic prefill→repack path has no boundaries to "
+                f"snapshot — set prefill_chunk (or drop prefix_cache_mb)")
+        override = self.routing_override
+        if override is not None and any(isinstance(p, tuple)
+                                        for p in override):
+            raise ValueError(
+                f"prefix_cache_mb={prefix_cache_mb:g} with a duo "
+                f"head-split routing_override: duo admissions take the "
+                f"repack fallback (chunked_eligible=False), so the store "
+                f"could never hold a snapshot — drop the duo override or "
+                f"the prefix cache")
+        budget = int(prefix_cache_mb * 2 ** 20)
+        host_budget = int(prefix_cache_host_mb * 2 ** 20)
+        if override is not None:
+            pattern = self._pattern(None, override)
+            what = "the overridden routing geometry"
+        else:
+            # smallest geometry the router can pick: SA rings wherever a
+            # routed layer may stream — if even that snapshot overflows
+            # the budget, no admission could ever publish
+            can_sa = cfg.flux.enabled and cfg.flux.sa_mode == "ssa"
+            pattern = tuple(
+                ("sa" if can_sa else "fa") if k == "attn" else None
+                for k in cfg.layer_kinds)
+            what = "the smallest routed geometry"
+        need = PXC.snapshot_spec_bytes(cfg, pattern, self.max_len)
+        if budget < need:
+            raise ValueError(
+                f"prefix_cache_mb={prefix_cache_mb:g} ({budget} bytes) "
+                f"cannot hold one chunk-boundary snapshot for {what} "
+                f"({need} bytes at max_len={self.max_len}): raise "
+                f"prefix_cache_mb to at least {need / 2 ** 20:.2f} MB or "
+                f"lower max_len")
+        return PXC.PrefixStore(chunk=self.prefill_chunk,
+                               budget_bytes=budget,
+                               host_budget_bytes=host_budget)
 
     # -- routing pattern ---------------------------------------------------
     def _pattern(self, decisions: Optional[np.ndarray],
@@ -501,6 +603,11 @@ class ServeEngine:
         """Compiled stream-chunk executables held by this engine."""
         return self._stream_chunk._cache_size()
 
+    def prefix_restore_cache_size(self) -> int:
+        """Compiled snapshot copy/restore executables (O(#geometries):
+        publication and restore of one geometry share the entry)."""
+        return self._snapshot._cache_size()
+
     def _check_executable_guard(self) -> None:
         """Every serving-path jit cache must stay geometry-bounded —
         decode at O(#geometries), the chunked-prefill stream and seed at
@@ -523,6 +630,15 @@ class ServeEngine:
                     f"for {len(keys)} (geometry, chunk-bucket) keys — a "
                     f"non-bucketed chunk size or pattern-static argument "
                     f"has leaked into the chunked-prefill jit signature")
+        compiled = self._snapshot._cache_size()
+        if compiled > len(self._snap_keys):
+            raise RuntimeError(
+                f"prefix-snapshot executable explosion: {compiled} "
+                f"compiled for {len(self._snap_keys)} geometry keys — "
+                f"the snapshot copy/restore jit must stay O(#geometries) "
+                f"(publication and restore of one geometry share an "
+                f"executable); something pattern- or length-shaped has "
+                f"leaked into its signature")
 
     # -- admission: chunked hot path --------------------------------------
     def chunked_eligible(self, seq_len: int, override=None, *,
@@ -558,26 +674,176 @@ class ServeEngine:
             return False  # xa/ta prefill has no ring-resident equivalent
         return True
 
-    def start_chunked_prefill(self, tokens: jax.Array,
-                              override=None) -> ChunkedPrefill:
+    def start_chunked_prefill(self, tokens: jax.Array, override=None, *,
+                              reuse: bool = True) -> ChunkedPrefill:
         """Begin a route-then-stream admission; the caller drives
         ``job.step()`` (the continuous scheduler interleaves steps with
-        decode ticks; ``prefill_chunked`` runs them back-to-back)."""
+        decode ticks; ``prefill_chunked`` runs them back-to-back).
+
+        When the engine has a prefix store and ``reuse`` holds, the job
+        starts from the deepest matching chunk-boundary snapshot: its
+        covered chunks are skipped outright (``prefix_hit_tokens``) and
+        only the uncovered suffix streams.  ``reuse=False`` opts the
+        request out of both lookup and publication."""
         tokens = jnp.asarray(tokens)
-        return ChunkedPrefill(
+        job = ChunkedPrefill(
             engine=self, tokens=tokens,
             override=(override if override is not None
                       else self.routing_override),
-            plan=chunk_plan(tokens.shape[1], self.prefill_chunk))
+            plan=chunk_plan(tokens.shape[1], self.prefill_chunk),
+            reuse=reuse)
+        if (self.prefix_store is not None and reuse
+                and tokens.shape[0] == 1
+                and self.chunked_eligible(tokens.shape[1], job.override)):
+            self._try_prefix_restore(job)
+        return job
 
-    def prefill_chunked(self, tokens: jax.Array,
-                        override=None) -> ChunkedPrefill:
+    def prefill_chunked(self, tokens: jax.Array, override=None, *,
+                        reuse: bool = True) -> ChunkedPrefill:
         """The chunked admission run to completion.  Returns the
         finished job (``pattern``/``caches``/``logits``/``p_fa``)."""
-        job = self.start_chunked_prefill(tokens, override)
+        job = self.start_chunked_prefill(tokens, override, reuse=reuse)
         while not job.done:
             job.step()
         return job
+
+    # -- shared-prefix snapshot reuse (DESIGN.md §Prefix cache) -------------
+    def _routable(self) -> bool:
+        return bool(self.cfg.flux.enabled and self.cfg.routable_layers())
+
+    def _snap_sig(self, caches, logits) -> Tuple:
+        return (KC.cache_geometry(caches), _arr_sig(logits))
+
+    def _restore_state(self, node: PXC._Node):
+        """Snapshot → fresh device buffers the admission may own (and
+        later donate).  Host-tier snapshots prefetch to device and are
+        promoted in place (the next hit skips the transfer); either
+        tier then hits the same per-geometry copy executable
+        (uncommitted inputs — the store never hands out committed
+        arrays), so restores stay O(#geometries) (guard-asserted)."""
+        snap = node.snap
+        # deviceless device_put: prefetches host (numpy) tiers to the
+        # default device and is a no-op for device tiers — either way
+        # the result is *uncommitted*, keying the same jit entry
+        caches, logits = jax.device_put((snap.caches, snap.logits))
+        if node.on_host:
+            # the prefetched copy is nobody else's buffer (the job only
+            # ever receives the jit copy below) — hand it to the store
+            self.prefix_store.promote(node, caches, logits)
+        self._snap_keys.add(self._snap_sig(caches, logits))
+        return self._snapshot(caches, logits)
+
+    def _try_prefix_restore(self, job: ChunkedPrefill) -> None:
+        """Longest-prefix-match ``job``'s prompt against the store and,
+        on a hit, seed the job from the snapshot: caches/logits/pattern
+        adopted, ``idx`` advanced past every covered chunk."""
+        store, cfg = self.prefix_store, self.cfg
+        toks = np.asarray(job.tokens[0])
+        node = store.match(toks, PXC.routing_key(job.override))
+        if (node is not None and job.override is None
+                and not RT.prefix_routing_reusable(
+                    cfg.flux, node.depth, toks.size,
+                    routable=self._routable())):
+            node = None  # routing not prefix-determined for this pair
+        if node is None:
+            store.misses += 1
+            return
+        store.acquire(node)  # pin against eviction while restoring
+        try:
+            snap = node.snap
+            job.caches, job.logits = self._restore_state(node)
+        finally:
+            store.release(node)
+        store.hits += 1
+        store.hit_tokens += snap.boundary
+        job.pattern = snap.pattern
+        job.p_fa = None if snap.p_fa is None else np.array(snap.p_fa)
+        job._geom = KC.cache_geometry(job.caches)
+        job.idx = snap.boundary // self.prefill_chunk
+        job.prefix_hit_tokens = snap.boundary
+        job.dispatches += 1  # the restore copy
+
+    def _maybe_publish(self, job: ChunkedPrefill, start: int,
+                       size: int) -> None:
+        """Publish the boundary the job just crossed, when canonical:
+        B=1, a *full*-chunk boundary (ragged ladder tails differ per
+        prompt length and are never shared), and — router-driven — a
+        prefix the routing decision actually transfers across."""
+        store = self.prefix_store
+        if (store is None or not job.reuse or job.tokens.shape[0] != 1
+                or size != self.prefill_chunk
+                or not self.chunked_eligible(job.seq_len, job.override)):
+            return
+        toks = np.asarray(job.tokens[0])
+        if self.publish_prefix(toks, start + size, job.caches, job.logits,
+                               job.pattern, p_fa=job.p_fa,
+                               override=job.override):
+            job.dispatches += 1  # the snapshot copy
+            job.published += 1
+
+    def publish_prefix(self, tokens, boundary: int, caches, logits,
+                       pattern, p_fa=None, override=None) -> bool:
+        """Insert a chunk-boundary snapshot of ``tokens[:boundary]``
+        into the prefix store.  Returns True iff a snapshot was
+        actually copied and inserted (False: duplicate, non-transferable
+        routing, or an over-budget geometry — skipped with a warning).
+
+        Raises ``ValueError`` for states that are not chunk-boundary
+        snapshots at all: publication from a repack-fallback admission
+        (``chunked_eligible`` False — full-sequence repack state has no
+        boundary snapshots, and ``routing_ctx="hard"`` decisions depend
+        on the prompt suffix) or a boundary off the full-chunk grid."""
+        store = self.prefix_store
+        if store is None:
+            raise ValueError(
+                "publish_prefix: engine has no prefix store — construct "
+                "the ServeEngine with prefix_cache_mb")
+        toks = np.asarray(tokens)
+        override = override if override is not None else \
+            self.routing_override
+        if not self.chunked_eligible(toks.size, override):
+            raise ValueError(
+                f"publish_prefix: this admission takes the monolithic "
+                f"repack fallback (chunked_eligible=False for seq_len="
+                f"{toks.size}), which has no chunk-boundary state to "
+                f"snapshot — its caches are a full-sequence repack and "
+                f"its routing may depend on the prompt suffix.  Serve "
+                f"the request through the chunked path (prefill_chunk "
+                f"set, prefix-pooled routing, no duo/modality inputs) "
+                f"or skip publication for it")
+        if (boundary <= 0 or boundary > toks.size
+                or boundary % self.prefill_chunk):
+            raise ValueError(
+                f"publish_prefix: boundary={boundary} is not a full-chunk "
+                f"plan boundary of a length-{toks.size} prompt (chunk="
+                f"{self.prefill_chunk}) — snapshots are shareable only at "
+                f"multiples of the chunk size")
+        if override is None and not RT.prefix_routing_reusable(
+                self.cfg.flux, boundary, toks.size,
+                routable=self._routable()):
+            return False  # decision pooled from tokens past the boundary
+        key = PXC.routing_key(override)
+        if store.covered(toks, boundary, key):
+            return False  # already published (LRU slot bumped)
+        nbytes = PXC.state_bytes(caches, logits)
+        if nbytes > store.budget_bytes + store.host_budget_bytes:
+            geom = self._snap_sig(caches, logits)
+            if geom not in self._snap_skip_warned:
+                self._snap_skip_warned.add(geom)
+                warnings.warn(
+                    f"prefix cache: one snapshot of this routed geometry "
+                    f"({nbytes} bytes) exceeds the whole store budget "
+                    f"({store.budget_bytes + store.host_budget_bytes} "
+                    f"bytes); skipping publication — raise "
+                    f"prefix_cache_mb to cache these admissions")
+            return False
+        self._snap_keys.add(self._snap_sig(caches, logits))
+        snap_caches, snap_logits = self._snapshot(caches, logits)
+        store.insert(toks, PXC.Snapshot(
+            caches=snap_caches, logits=snap_logits, pattern=pattern,
+            p_fa=None if p_fa is None else np.array(p_fa),
+            boundary=boundary, nbytes=nbytes), key)
+        return True
 
     # -- admission: monolithic fallback ------------------------------------
     def prefill_route_repack(self, tokens: jax.Array, override=None, *,
@@ -623,7 +889,8 @@ class ServeEngine:
     def generate(self, tokens: np.ndarray, n_steps: int, *,
                  prefix_embeddings=None, encoder_frames=None,
                  greedy: bool = True, rng=None,
-                 routing_override=None) -> GenerationResult:
+                 routing_override=None,
+                 prefix_reuse: bool = True) -> GenerationResult:
         cfg = self.cfg
         tokens = jnp.asarray(tokens)
         seq_len = tokens.shape[1] + (prefix_embeddings.shape[1]
@@ -638,13 +905,16 @@ class ServeEngine:
         if self._encode is not None:
             enc_out = self._encode(params=self.params, frames=encoder_frames)
             dispatches += 1
+        prefix_hit = 0
         if self.chunked_eligible(seq_len, routing_override,
                                  prefix_embeddings=prefix_embeddings,
                                  encoder_frames=encoder_frames):
-            job = self.prefill_chunked(tokens, routing_override)
+            job = self.prefill_chunked(tokens, routing_override,
+                                       reuse=prefix_reuse)
             pattern, caches = job.pattern, job.caches
             logits, p_fa = job.logits, job.p_fa
             dispatches += job.dispatches
+            prefix_hit = job.prefix_hit_tokens
         else:
             pf, pattern, caches, seq_len = self.prefill_route_repack(
                 tokens, routing_override,
@@ -690,7 +960,8 @@ class ServeEngine:
         return GenerationResult(
             tokens=np.asarray(toks), routing=pattern,
             msr=msr_val, kv_bytes=kv_bytes,
-            p_fa=p_fa, dispatches=dispatches)
+            p_fa=p_fa, dispatches=dispatches,
+            prefix_hit_tokens=prefix_hit)
 
     # -- continuous-batching (streaming) frontend ---------------------------
     def scheduler(self, **kw):
@@ -714,9 +985,41 @@ class ServeEngine:
         return self.scheduler().tick()
 
     def drain(self):
-        """Tick until every submitted request finished; returns
-        {rid: FinishedRequest} with TTFT/throughput metrics."""
-        return self.scheduler().drain()
+        """Tick until every submitted request finished.  Returns a
+        ``DrainResult``: the usual {rid: FinishedRequest} mapping plus
+        a ``.summary`` with the TTFT split (queue vs prefill), prefix
+        hit accounting, and the KV/prefix-store occupancy split."""
+        finished = self.scheduler().drain()
+        return DrainResult(finished, self._drain_summary(finished))
+
+    def _drain_summary(self, finished) -> Dict[str, Any]:
+        ms = [f.metrics for f in finished.values()]
+        sched = self._scheduler
+        pools = list(sched.pools.values()) if sched is not None else []
+        stats = kv_cache_stats([p.caches for p in pools],
+                               self.prefix_store)
+        prompt_tokens = sum(m.prompt_len for m in ms)
+        hit_tokens = sum(m.prefix_hit_tokens for m in ms)
+
+        def p50(xs: List[float]) -> float:
+            return float(np.median(xs)) if xs else float("nan")
+
+        return {
+            "n_requests": len(ms),
+            "ttft_p50_s": p50([m.ttft for m in ms]),
+            "prefill_time_p50_s": p50([m.prefill_time for m in ms]),
+            "slot_wait_p50_s": p50([m.slot_wait for m in ms]),
+            "prompt_tokens": prompt_tokens,
+            "prefix_hit_tokens": hit_tokens,
+            "prefix_hit_fraction": (hit_tokens / prompt_tokens
+                                    if prompt_tokens else 0.0),
+            "kv_payload_bytes": stats.payload_bytes,
+            "kv_overhead_bytes": stats.overhead_bytes,
+            "prefix_device_bytes": stats.prefix_device_bytes,
+            "prefix_host_bytes": stats.prefix_host_bytes,
+            "prefix_store": (self.prefix_store.stats()
+                             if self.prefix_store is not None else None),
+        }
 
 
 # ---------------------------------------------------------------------------
@@ -733,6 +1036,10 @@ class Request:
     # meaningless under serve_batch (no slot contention there)
     priority: int = 0
     routing_override: Optional[Tuple[Any, ...]] = None
+    # opt this request out of shared-prefix snapshot reuse — neither
+    # seeded from nor published to the engine's prefix store (e.g.
+    # privacy-scoped prompts that must not warm other tenants)
+    prefix_reuse: bool = True
 
 
 def _trim_eos(tokens: np.ndarray, eos_id: Optional[int]) -> np.ndarray:
@@ -757,12 +1064,13 @@ def serve_batch(engine: ServeEngine, requests: Sequence[Request]
     """
     buckets: Dict[Tuple, List[Request]] = {}
     for r in requests:
-        buckets.setdefault((len(r.tokens), r.n_steps, r.routing_override),
-                           []).append(r)
+        buckets.setdefault((len(r.tokens), r.n_steps, r.routing_override,
+                            r.prefix_reuse), []).append(r)
     results: Dict[int, np.ndarray] = {}
-    for (_, n_steps, override), rs in buckets.items():
+    for (_, n_steps, override, reuse), rs in buckets.items():
         toks = np.stack([r.tokens for r in rs])
-        gen = engine.generate(toks, n_steps, routing_override=override)
+        gen = engine.generate(toks, n_steps, routing_override=override,
+                              prefix_reuse=reuse)
         for i, r in enumerate(rs):
             results[r.rid] = _trim_eos(gen.tokens[i], r.eos_id)
     return results

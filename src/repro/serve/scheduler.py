@@ -71,6 +71,10 @@ class RequestMetrics:
     prefill_done_t: Optional[float] = None
     # decode-cache footprint at admission (payload/overhead split)
     kv_stats: Optional[KVStats] = None
+    # prompt tokens seeded from a warm prefix snapshot (the admission
+    # that landed): these tokens issued NO prefill chunks, so a TTFT
+    # win is attributable to reuse vs queueing via the prefill split
+    prefix_hit_tokens: int = 0
 
     @property
     def queue_delay(self) -> float:
@@ -220,7 +224,14 @@ class ContinuousScheduler:
                     continue  # monolithic fallback admits in _admit
                 inf.job = eng.start_chunked_prefill(
                     jnp.asarray(tokens)[None],
-                    getattr(inf.req, "routing_override", None))
+                    getattr(inf.req, "routing_override", None),
+                    reuse=getattr(inf.req, "prefix_reuse", True))
+                # clamp to the prompt: a preemption-recompute replays
+                # prompt+generated, and its hit boundary may cover
+                # tokens this request generated itself — those are not
+                # "prompt tokens served warm"
+                inf.metrics.prefix_hit_tokens = min(
+                    inf.job.prefix_hit_tokens, inf.metrics.prompt_len)
                 inf.metrics.prefill_start_t = self.clock()
             while budget > 0 and not inf.job.done:
                 inf.job.step()
@@ -306,6 +317,7 @@ class ContinuousScheduler:
         # re-bracket the prefill split around the admission that lands
         victim.metrics.prefill_start_t = None
         victim.metrics.prefill_done_t = None
+        victim.metrics.prefix_hit_tokens = 0
         self.waiting.append(victim)
         return slot
 

@@ -1,0 +1,375 @@
+"""Shared-prefix radix cache (DESIGN.md §Prefix cache).
+
+Load-bearing guarantees of chunk-boundary snapshot reuse:
+  1. snapshot exactness: a hit-path admission — including a full
+     store→evict-to-host→restore round trip — produces *bitwise-equal*
+     greedy continuations vs the cold chunked path, for every cache
+     kind (FullKV / RingKV / LatentKV / RingLatentKV / Mamba incl.
+     conv tail) across phi3 / jamba / deepseek;
+  2. covered tokens issue NO prefill chunks (the O(unique-suffix)
+     admission claim);
+  3. store invariants: refcounts never go negative, eviction respects
+     in-use pins, byte budgets hold under admit/retire churn, and the
+     snapshot copy/restore jit stays O(#geometries);
+  4. misconfigurations fail loudly at config time (budget below one
+     snapshot, store without the chunked prefill) and snapshot
+     publication from a repack-fallback admission raises.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.router import prefix_routing_reusable
+from repro.models import model as MD
+from repro.serve import (PrefixStore, Request, ServeEngine, Snapshot,
+                         kv_cache_stats)
+from repro.serve import prefix_cache as PXC
+
+ARCHS = ["phi3-mini-3.8b", "jamba-1.5-large-398b", "deepseek-v2-236b"]
+CH, N = 16, 6
+
+
+def _setup(arch):
+    cfg = smoke_variant(get_config(arch))
+    params = MD.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _mixed_pattern(cfg):
+    flip, out = True, []
+    for k in cfg.layer_kinds:
+        out.append(("fa" if flip else "sa") if k == "attn" else None)
+        flip = not flip if k == "attn" else flip
+    return tuple(out)
+
+
+def _prompts(cfg, prefix_len=32, tails=(16, 13)):
+    """Prompts sharing a ``prefix_len``-token prefix, distinct tails."""
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, size=prefix_len
+                          ).astype(np.int32)
+    return [np.concatenate([
+        prefix, rng.integers(0, cfg.vocab_size, size=t).astype(np.int32)
+    ])[None] for t in tails]
+
+
+# ---------------------------------------------------------------------------
+# Snapshot exactness: store → evict-to-host → restore, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_hit_path_bitwise_through_host_roundtrip(arch):
+    """Warm the store with one prompt, demote every snapshot to the
+    host tier, then serve a second prompt sharing the prefix: greedy
+    continuations must be bitwise-equal to the cold chunked path and
+    the covered tokens must issue no prefill chunks."""
+    cfg, params = _setup(arch)
+    pA, pB = _prompts(cfg)
+    cold = ServeEngine(params, cfg, max_len=64, prefill_chunk=CH)
+    refA, refB = cold.generate(pA, N), cold.generate(pB, N)
+
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=CH,
+                      prefix_cache_mb=64, prefix_cache_host_mb=64)
+    warm = eng.generate(pA, N)
+    assert warm.prefix_hit_tokens == 0
+    assert np.array_equal(warm.tokens, refA.tokens)
+    # boundaries 16/32/48 published (48 = the whole of pA)
+    assert eng.prefix_store.stats().snapshots == 3
+
+    eng.prefix_store.offload_all()
+    s = eng.prefix_store.stats()
+    assert s.device_bytes == 0 and s.host_bytes > 0
+
+    # full-cover hit: identical prompt, zero chunks streamed
+    job = eng.prefill_chunked(jnp.asarray(pA))
+    assert job.done and job.chunks_streamed == 0
+    assert job.prefix_hit_tokens == pA.shape[1]
+    hotA = eng.generate(pA, N)
+    assert hotA.prefix_hit_tokens == pA.shape[1]
+    assert np.array_equal(hotA.tokens, refA.tokens)
+
+    # partial hit: shared 32-token prefix restored, only the unique
+    # tail streams (and the ragged tail is never published)
+    hotB = eng.generate(pB, N)
+    assert hotB.prefix_hit_tokens == 32
+    assert hotB.routing == refB.routing
+    assert np.array_equal(hotB.tokens, refB.tokens)
+    eng._check_executable_guard()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_hit_path_bitwise_override_geometry(arch):
+    """Fixed mixed fa/sa pattern (ring + full caches in one admission):
+    override-keyed snapshots restore bitwise too."""
+    cfg, params = _setup(arch)
+    ov = _mixed_pattern(cfg)
+    pA, pB = _prompts(cfg)
+    ref = ServeEngine(params, cfg, max_len=64, prefill_chunk=CH,
+                      routing_override=ov).generate(pB, N)
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=CH,
+                      routing_override=ov, prefix_cache_mb=64,
+                      prefix_cache_host_mb=64)
+    eng.generate(pA, N)
+    eng.prefix_store.offload_all()
+    hot = eng.generate(pB, N)
+    assert hot.prefix_hit_tokens == 32
+    assert np.array_equal(hot.tokens, ref.tokens)
+    eng._check_executable_guard()
+
+
+def test_hit_requires_matching_routing_key():
+    """Snapshots published under one override are never offered to
+    requests running another (or the live router)."""
+    cfg, params = _setup("phi3-mini-3.8b")
+    pA, _ = _prompts(cfg)
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=CH,
+                      prefix_cache_mb=64)
+    eng.generate(pA, N)  # router-keyed snapshots
+    ov = _mixed_pattern(cfg)
+    gen = eng.generate(pA, N, routing_override=ov)
+    assert gen.prefix_hit_tokens == 0  # override key ≠ router key
+    gen2 = eng.generate(pA, N)
+    assert gen2.prefix_hit_tokens == pA.shape[1]
+
+
+def test_prefix_reuse_opt_out():
+    cfg, params = _setup("phi3-mini-3.8b")
+    pA, _ = _prompts(cfg)
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=CH,
+                      prefix_cache_mb=64)
+    out = eng.generate(pA, N, prefix_reuse=False)
+    assert out.prefix_hit_tokens == 0
+    assert eng.prefix_store.stats().inserts == 0  # no publication either
+    ref = ServeEngine(params, cfg, max_len=64,
+                      prefill_chunk=CH).generate(pA, N)
+    assert np.array_equal(out.tokens, ref.tokens)
+
+
+def test_short_prompt_routing_not_reusable():
+    """Router-driven prompts shorter than the pool window must neither
+    publish nor hit: their routing decision is length-dependent."""
+    cfg, params = _setup("phi3-mini-3.8b")
+    flux = cfg.flux
+    assert not prefix_routing_reusable(flux, flux.pool_size - 1,
+                                       flux.pool_size - 1)
+    assert prefix_routing_reusable(flux, flux.pool_size, flux.pool_size)
+    assert not prefix_routing_reusable(flux, flux.pool_size,
+                                       flux.pool_size,
+                                       pooling="prefix_suffix")
+    assert prefix_routing_reusable(flux, 1, 1, routable=False)
+    # engine-level: chunk == 4 < pool_size == 8 → a 4-token-boundary
+    # snapshot would predate the pool window; nothing publishes
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=4,
+                      prefix_cache_mb=64)
+    toks = np.arange(4, dtype=np.int32)[None] % cfg.vocab_size
+    eng.generate(toks, 2)
+    assert eng.prefix_store.stats().inserts == 0
+
+
+# ---------------------------------------------------------------------------
+# Store invariants: refcounts, pins, budgets, executable accounting
+# ---------------------------------------------------------------------------
+
+def _fake_snap(rng, boundary, kb=1):
+    arr = jnp.asarray(rng.normal(size=(kb * 256,)), jnp.float32)  # 1 KiB
+    logits = jnp.asarray(rng.normal(size=(1, 8)), jnp.float32)
+    return Snapshot(caches=[arr], logits=logits, pattern=("fa",),
+                    p_fa=None, boundary=boundary,
+                    nbytes=PXC.state_bytes([arr], logits))
+
+
+def test_refcount_underflow_raises():
+    store = PrefixStore(chunk=4, budget_bytes=1 << 20)
+    rng = np.random.default_rng(0)
+    toks = np.arange(8, dtype=np.int32)
+    node = store.insert(toks, _fake_snap(rng, 4), ("router",))
+    store.acquire(node)
+    store.release(node)
+    with pytest.raises(RuntimeError, match="refcount"):
+        store.release(node)
+    assert node.refs == 0
+
+
+def test_eviction_respects_pins():
+    rng = np.random.default_rng(1)
+    one = _fake_snap(rng, 4).nbytes
+    store = PrefixStore(chunk=4, budget_bytes=int(one * 2.5))
+    toks = np.arange(64, dtype=np.int32)
+    pinned = store.insert(toks, _fake_snap(rng, 4), ("router",))
+    store.acquire(pinned)
+    for b in (8, 12, 16, 20):  # overflow the budget repeatedly
+        store.insert(toks, _fake_snap(rng, b), ("router",))
+    assert pinned.snap is not None  # LRU-oldest yet never evicted
+    assert store.device_bytes <= int(one * 2.5)
+    store.release(pinned)
+    store.insert(toks, _fake_snap(rng, 24), ("router",))
+    assert pinned.snap is None  # unpinned → evictable again
+
+
+def test_byte_budgets_honored_under_churn():
+    rng = np.random.default_rng(2)
+    one = _fake_snap(rng, 4).nbytes
+    dev_budget, host_budget = int(one * 3.5), int(one * 2.5)
+    store = PrefixStore(chunk=4, budget_bytes=dev_budget,
+                        host_budget_bytes=host_budget)
+    for i in range(40):
+        toks = rng.integers(0, 50, size=4 * (1 + i % 5)).astype(np.int32)
+        boundary = 4 * rng.integers(1, toks.size // 4 + 1)
+        node = store.match(toks, ("router",))
+        if node is not None:
+            store.acquire(node)
+            store.release(node)
+        store.insert(toks, _fake_snap(rng, int(boundary)), ("router",))
+        assert store.device_bytes <= dev_budget
+        assert store.host_bytes <= host_budget
+        s = store.stats()
+        assert s.device_bytes >= 0 and s.host_bytes >= 0
+    s = store.stats()
+    assert s.demotions > 0 and s.drops > 0  # both tiers overflowed
+    assert s.snapshots <= 6  # ≈ 3.5 device + 2.5 host snapshots
+
+
+def test_restore_jits_stay_per_geometry():
+    """Publish + restore across two geometries and many prompts: the
+    snapshot copy jit compiles once per geometry, and the engine guard
+    holds through the churn."""
+    cfg, params = _setup("phi3-mini-3.8b")
+    fa = tuple("fa" if k == "attn" else None for k in cfg.layer_kinds)
+    mixed = _mixed_pattern(cfg)
+    eng = ServeEngine(params, cfg, max_len=96, prefill_chunk=CH,
+                      prefix_cache_mb=64, prefix_cache_host_mb=64)
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab_size, size=32).astype(np.int32)
+    for ov in (fa, mixed):
+        for tail in (16, 21, 32):
+            toks = np.concatenate([
+                prefix,
+                rng.integers(0, cfg.vocab_size, size=tail).astype(np.int32)
+            ])[None]
+            eng.generate(toks, 2, routing_override=ov)
+    assert eng.prefix_restore_cache_size() <= 2
+    assert eng.prefix_store.stats().hits > 0
+    eng._check_executable_guard()
+
+
+def test_kv_cache_stats_reports_prefix_tier_split():
+    cfg, params = _setup("phi3-mini-3.8b")
+    pA, _ = _prompts(cfg)
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=CH,
+                      prefix_cache_mb=64, prefix_cache_host_mb=64)
+    job = eng.prefill_chunked(jnp.asarray(pA))
+    stats = kv_cache_stats(job.caches, eng.prefix_store)
+    assert stats.payload_bytes > 0 and stats.overhead_bytes > 0
+    assert stats.prefix_device_bytes == eng.prefix_store.device_bytes > 0
+    assert stats.prefix_host_bytes == 0
+    eng.prefix_store.offload_all()
+    stats = kv_cache_stats(job.caches, eng.prefix_store)
+    assert stats.prefix_device_bytes == 0
+    assert stats.prefix_host_bytes == eng.prefix_store.host_bytes > 0
+    # the prefix tiers ride alongside — total_bytes is still the live
+    # decode-cache footprint only
+    assert stats.total_bytes == stats.payload_bytes + stats.overhead_bytes
+
+
+# ---------------------------------------------------------------------------
+# Loud configuration / publication errors
+# ---------------------------------------------------------------------------
+
+def test_budget_below_one_snapshot_raises_at_config():
+    cfg, params = _setup("phi3-mini-3.8b")
+    with pytest.raises(ValueError, match="prefix_cache_mb.*snapshot"):
+        ServeEngine(params, cfg, max_len=64, prefill_chunk=CH,
+                    prefix_cache_mb=1e-4)
+
+
+def test_prefix_cache_without_chunked_prefill_raises():
+    cfg, params = _setup("phi3-mini-3.8b")
+    with pytest.raises(ValueError, match="chunk"):
+        ServeEngine(params, cfg, max_len=64, prefill_chunk=None,
+                    prefix_cache_mb=64)
+
+
+def test_prefix_cache_with_duo_override_raises():
+    cfg, params = _setup("phi3-mini-3.8b")
+    duo = tuple(("duo", 1) if k == "attn" else None
+                for k in cfg.layer_kinds)
+    with pytest.raises(ValueError, match="duo"):
+        ServeEngine(params, cfg, max_len=64, prefill_chunk=CH,
+                    routing_override=duo, prefix_cache_mb=64)
+
+
+def test_publish_from_repack_fallback_raises():
+    """Publication requires a chunked-eligible admission: repack state
+    is full-sequence (no chunk boundaries) and prefix+suffix routing
+    depends on the prompt tail."""
+    cfg, params = _setup("phi3-mini-3.8b")
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=CH,
+                      routing_pooling="prefix_suffix", prefix_cache_mb=64)
+    toks = np.arange(32, dtype=np.int32)[None] % cfg.vocab_size
+    assert not eng.chunked_eligible(32)
+    pf, pattern, caches, _ = eng.prefill_route_repack(jnp.asarray(toks))
+    with pytest.raises(ValueError, match="repack fallback"):
+        eng.publish_prefix(toks[0], CH, caches, pf.logits, pattern)
+
+
+def test_publish_off_boundary_raises():
+    cfg, params = _setup("phi3-mini-3.8b")
+    pA, _ = _prompts(cfg)
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=CH,
+                      prefix_cache_mb=64)
+    job = eng.prefill_chunked(jnp.asarray(pA))
+    with pytest.raises(ValueError, match="boundary"):
+        eng.publish_prefix(pA[0], CH + 3, job.caches, job.logits,
+                           job.pattern)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler integration: hit metrics, drain summary, bitwise streams
+# ---------------------------------------------------------------------------
+
+def test_scheduler_threads_hit_metrics_and_summary():
+    cfg, params = _setup("phi3-mini-3.8b")
+    rng = np.random.default_rng(4)
+    prefix = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    tails = (8, 11, 5)
+    reqs = [Request(rid=i, tokens=np.concatenate([
+        prefix, rng.integers(0, cfg.vocab_size, size=t).astype(np.int32)
+    ]), n_steps=4) for i, t in enumerate(tails)]
+
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=8,
+                      prefix_cache_mb=64)
+    eng.scheduler(slots_per_bucket=2, chunk=4)
+    for r in reqs:
+        eng.submit(r)
+    out = eng.drain()
+
+    ref = ServeEngine(params, cfg, max_len=64, prefill_chunk=8)
+    hit_total = 0
+    for r in reqs:
+        gen = ref.generate(r.tokens[None], r.n_steps)
+        assert np.array_equal(out[r.rid].tokens, gen.tokens[0]), r.rid
+        hit_total += out[r.rid].metrics.prefix_hit_tokens
+    # the first request warms boundaries 8 and 16; later arrivals reuse
+    # the shared 16-token prefix
+    assert out[0].metrics.prefix_hit_tokens == 0
+    assert {out[i].metrics.prefix_hit_tokens for i in (1, 2)} == {16}
+    assert out.summary["prefix_hit_tokens"] == hit_total == 32
+    assert 0 < out.summary["prefix_hit_fraction"] < 1
+    assert out.summary["prefix_device_bytes"] > 0
+    assert out.summary["prefix_host_bytes"] == 0
+    assert out.summary["prefix_store"].hits == 2
+    assert out.summary["kv_payload_bytes"] > 0
+    eng._check_executable_guard()
+
+
+def test_drain_summary_without_store():
+    cfg, params = _setup("phi3-mini-3.8b")
+    eng = ServeEngine(params, cfg, max_len=64, prefill_chunk=8)
+    eng.submit(Request(rid=0, tokens=np.arange(12, dtype=np.int32)
+                       % cfg.vocab_size, n_steps=3))
+    out = eng.drain()
+    assert out.summary["prefix_hit_tokens"] == 0
+    assert out.summary["prefix_store"] is None
+    assert out[0].tokens.shape == (3,)
