@@ -1,0 +1,214 @@
+"""Graceful degradation under overload (DESIGN.md §Robustness & SLO).
+
+An overload burst — every request arrives at once into a small slot
+pool — served twice by the continuous scheduler:
+
+  guardrails OFF — unbounded queue, no deadlines, neutral routing: the
+      classic cliff.  Everything is eventually served, but tail TTFT
+      grows with queue depth and most requests blow any latency target.
+  guardrails ON  — bounded queue (shed), per-request deadlines
+      (timeout), and the load-adaptive sparsity dial: the scheduler
+      sacrifices hopeless work explicitly so surviving requests meet
+      the target.
+
+Reports p50/p99 TTFT over the requests that actually served, *goodput*
+(tokens from ``ok``-status requests that finished within the SLO
+target, per second of wall clock), and per-status counts.  A second
+sweep serves increasing burst sizes with guardrails on and records the
+mean SA fraction of admitted requests — the quality-vs-load curve of
+the sparsity dial (quality degrades monotonically with pressure
+instead of latency collapsing).
+
+Writes ``BENCH_degraded.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+
+from benchmarks.common import CACHE_DIR, Row, bench_cfg
+from repro.models import model as MD
+from repro.serve import (ContinuousScheduler, Request, SLOConfig,
+                         STATUS_OK, ServeEngine, STATUSES)
+
+LENS = (24, 32, 40, 48)
+
+
+def _requests(cfg, n: int, n_steps: int, rid0: int = 0,
+              seed: int = 0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid0 + i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=LENS[i % len(LENS)]
+                                        ).astype(np.int32),
+                    n_steps=n_steps)
+            for i in range(n)]
+
+
+def _pct(xs: List[float], q: float) -> float:
+    xs = [x for x in xs if np.isfinite(x)]
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def _sa_fraction(routing) -> float:
+    routed = [p for p in (routing or ()) if p is not None]
+    return (sum(p == "sa" for p in routed) / len(routed)
+            if routed else float("nan"))
+
+
+def _run_burst(eng: ServeEngine, reqs: List[Request], *,
+               slots: int, chunk: int, slo_target_s: float) -> Dict:
+    """Submit every request at t=0, tick until all work retired.
+    A fresh scheduler per burst (the engine's jit caches stay warm);
+    the engine's own SLOConfig governs the guardrails."""
+    sched = ContinuousScheduler(eng, slots_per_bucket=slots, chunk=chunk,
+                                prefill_chunks_per_tick=4, slo=eng.slo)
+    t0 = time.perf_counter()
+    for r in reqs:
+        sched.submit(r)
+    done = {}
+    while sched.waiting or sched.n_active():
+        for f in sched.tick():
+            done[f.rid] = f
+    for f in sched.tick():  # announce any submit-time sheds
+        done[f.rid] = f
+    wall = time.perf_counter() - t0
+    ttft = [f.metrics.ttft for f in done.values()]
+    status_counts = {s: sum(f.status == s for f in done.values())
+                     for s in STATUSES}
+    good_tokens = sum(
+        f.metrics.n_generated for f in done.values()
+        if f.status == STATUS_OK
+        and f.metrics.finish_t - f.metrics.arrival_t <= slo_target_s)
+    tokens = sum(f.metrics.n_generated for f in done.values())
+    sa = [_sa_fraction(f.routing) for f in done.values()
+          if f.routing is not None]
+    return {
+        "n_requests": len(reqs), "wall_s": wall, "tokens": tokens,
+        "goodput_tokens_per_sec": good_tokens / wall,
+        "tokens_per_sec": tokens / wall,
+        "ttft_p50_s": _pct(ttft, 50), "ttft_p99_s": _pct(ttft, 99),
+        "status_counts": status_counts,
+        "served_fraction": (status_counts[STATUS_OK] / len(reqs)
+                            if reqs else 0.0),
+        "mean_sa_fraction": (float(np.nanmean(sa)) if sa
+                             else float("nan")),
+        "sa_level_final": eng.sa_level,
+        "geometries": sched.n_geometries(),
+        "decode_executables": eng.decode_cache_size(),
+    }
+
+
+def _engine(params, cfg, max_len: int,
+            slo: Optional[SLOConfig]) -> ServeEngine:
+    return ServeEngine(params, cfg, max_len=max_len, slo=slo)
+
+
+def run(n_requests: int = 24, n_steps: int = 64, slots: int = 4,
+        chunk: int = 8, slo_target_s: float = 2.0,
+        loads: tuple = (8, 16, 24)) -> List[Row]:
+    cfg = bench_cfg()
+    params = MD.init_params(jax.random.key(0), cfg)
+    max_len = max(LENS) + n_steps + 2
+    guarded = SLOConfig(max_queue=max(2 * slots, 2),
+                        default_deadline_s=slo_target_s,
+                        adaptive_sparsity=True, pressure_patience=1)
+
+    # separate engines (separate jit caches, separate schedulers); one
+    # warmup burst each keeps compile time out of the measured run
+    eng_off = _engine(params, cfg, max_len, None)
+    eng_on = _engine(params, cfg, max_len, guarded)
+    _run_burst(eng_off, _requests(cfg, n_requests, n_steps),
+               slots=slots, chunk=chunk, slo_target_s=slo_target_s)
+    _run_burst(eng_on, _requests(cfg, n_requests, n_steps),
+               slots=slots, chunk=chunk, slo_target_s=slo_target_s)
+    off = _run_burst(eng_off,
+                     _requests(cfg, n_requests, n_steps, rid0=1000),
+                     slots=slots, chunk=chunk, slo_target_s=slo_target_s)
+    on = _run_burst(eng_on,
+                    _requests(cfg, n_requests, n_steps, rid0=1000),
+                    slots=slots, chunk=chunk, slo_target_s=slo_target_s)
+
+    # quality-vs-load: guardrails on, rising burst size — the dial
+    # should trade SA fraction (quality) for admission, monotonically
+    # in pressure, while TTFT of the served set stays bounded
+    curve = []
+    for li, load in enumerate(loads):
+        eng = _engine(params, cfg, max_len, guarded)
+        r = _run_burst(eng, _requests(cfg, load, n_steps, seed=2 + li),
+                       slots=slots, chunk=chunk,
+                       slo_target_s=slo_target_s)
+        curve.append({"offered_load": load,
+                      "mean_sa_fraction": r["mean_sa_fraction"],
+                      "ttft_p50_s": r["ttft_p50_s"],
+                      "served_fraction": r["served_fraction"],
+                      "shed": r["status_counts"]["shed"],
+                      "timeout": r["status_counts"]["timeout"],
+                      "sa_level_final": r["sa_level_final"]})
+
+    results = {
+        "n_requests": n_requests, "n_steps": n_steps,
+        "slots_per_bucket": slots, "chunk": chunk,
+        "slo_target_s": slo_target_s,
+        "guardrails_off": off, "guardrails_on": on,
+        "quality_vs_load": curve,
+    }
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    with open(os.path.join(CACHE_DIR, "BENCH_degraded.json"), "w") as f:
+        json.dump({"timestamp": time.time(),
+                   "device": jax.default_backend(),
+                   "results": results}, f, indent=2)
+
+    def fmt(r: Dict) -> str:
+        sc = r["status_counts"]
+        return (f"ttft_p50={r['ttft_p50_s'] * 1e3:.0f}ms;"
+                f"ttft_p99={r['ttft_p99_s'] * 1e3:.0f}ms;"
+                f"goodput={r['goodput_tokens_per_sec']:.0f}tok/s;"
+                f"ok={sc['ok']};shed={sc['shed']};"
+                f"timeout={sc['timeout']}")
+
+    return [
+        Row("degraded-mode/guardrails-off", off["wall_s"] * 1e6, fmt(off)),
+        Row("degraded-mode/guardrails-on", on["wall_s"] * 1e6, fmt(on)),
+        Row("degraded-mode/quality-vs-load", 0.0,
+            ";".join(f"load{c['offered_load']}:"
+                     f"sa={c['mean_sa_fraction']:.2f}"
+                     f"@{c['ttft_p50_s'] * 1e3:.0f}ms"
+                     for c in curve)),
+    ]
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    rows = (run(n_requests=6, n_steps=8, slots=2, slo_target_s=30.0,
+                loads=(3, 6))
+            if smoke else run())
+    for r in rows:
+        print(r.csv())
+    data = json.load(open(os.path.join(CACHE_DIR, "BENCH_degraded.json")))
+    res = data["results"]
+    off, on = res["guardrails_off"], res["guardrails_on"]
+    # advisory on shared/smoke runners: guarded tail TTFT (over the
+    # served set) should not exceed the unguarded tail
+    if (np.isfinite(on["ttft_p99_s"]) and np.isfinite(off["ttft_p99_s"])
+            and on["ttft_p99_s"] > off["ttft_p99_s"]):
+        print("# WARN guardrails-on p99 TTFT exceeds guardrails-off"
+              + (" (smoke shapes — advisory)" if smoke else ""))
+    else:
+        print(f"# ok degraded-mode: p99 {on['ttft_p99_s']:.3f}s (on) vs "
+              f"{off['ttft_p99_s']:.3f}s (off), goodput "
+              f"{on['goodput_tokens_per_sec']:.0f} vs "
+              f"{off['goodput_tokens_per_sec']:.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,11 +10,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks import (bench_continued_training,  # noqa: E402
                         bench_continuous_batching, bench_data_balance,
-                        bench_decode_speedup, bench_head_vs_layer,
-                        bench_longbench_proxy, bench_prefill_speedup,
-                        bench_prefix_cache, bench_router_overhead,
-                        bench_ruler_proxy, bench_sparsity_sweep,
-                        bench_target_sparsity, roofline)
+                        bench_decode_speedup, bench_degraded_mode,
+                        bench_head_vs_layer, bench_longbench_proxy,
+                        bench_prefill_speedup, bench_prefix_cache,
+                        bench_router_overhead, bench_ruler_proxy,
+                        bench_sparsity_sweep, bench_target_sparsity,
+                        roofline)
 
 BENCHES = [
     ("Table1/LongBench-E", bench_longbench_proxy),
@@ -29,6 +30,7 @@ BENCHES = [
     ("Serving/decode-speedup", bench_decode_speedup),
     ("Serving/continuous-batching", bench_continuous_batching),
     ("Serving/prefix-cache", bench_prefix_cache),
+    ("Serving/degraded-mode", bench_degraded_mode),
     ("Roofline", roofline),
 ]
 

@@ -94,6 +94,29 @@ def hard_route(params: Dict[str, jax.Array], x_q: jax.Array,
     return (logits[:, 0] > logits[:, 1]).astype(jnp.int32), p_fa
 
 
+def sa_biased_threshold(level: int, *, step: float = 0.15,
+                        max_level: int = 3) -> float:
+    """FA-decision threshold for one rung of the load-adaptive sparsity
+    ladder (serve/slo.py; ROADMAP "load-adaptive elastic sparsity").
+
+    Hard routing picks FA when the pooled p_fa exceeds the threshold;
+    the neutral rung (level 0) is the paper's argmax at 0.5, and each
+    rung raises the bar by ``step`` so a pressured scheduler converts
+    borderline-FA layers to SA.  Levels are **quantized and clamped**:
+    the dial can only select thresholds on this ladder, so the set of
+    reachable routing patterns — and therefore cache geometries — stays
+    the same finite set the executable guard already counts, and the
+    threshold never reaches 1.0 (which would force SA even at
+    p_fa == 1 and make FA unreachable rather than merely disfavored).
+
+    Monotone by construction: raising the level can only move layers
+    FA → SA for a fixed prompt, never the reverse — the degradation
+    ladder degrades, it does not oscillate quality.
+    """
+    lv = max(0, min(int(level), int(max_level)))
+    return min(0.5 + lv * float(step), 0.999)
+
+
 def prefix_routing_reusable(flux: FluxConfig, prefix_len: int,
                             seq_len: int, *, pooling: str = "prefix",
                             routable: bool = True) -> bool:

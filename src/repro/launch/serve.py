@@ -18,7 +18,9 @@ import numpy as np
 from repro.configs import ALL_ARCHS, get_config, smoke_variant
 from repro.data.synthetic import SyntheticTasks
 from repro.models import model as MD
-from repro.serve import Request, ServeEngine, serve_batch
+from repro.serve import (Request, ServeEngine, SLOConfig, STATUS_OK,
+                         SHED_POLICIES, SHED_REJECT_NEWEST,
+                         serve_batch_finished)
 from repro.train import checkpoint
 
 
@@ -54,7 +56,9 @@ def _serve_continuous(engine: ServeEngine, reqs, args) -> None:
     pending = list(reqs)
     next_arrival = 0
     done = {}
-    while len(done) < len(reqs):
+    # loop on submitted-work-left, not result count: a shed request
+    # retires at submit() time and is only announced by the next tick
+    while pending or sched.waiting or sched.n_active():
         now = time.monotonic() - t0
         while pending and arrivals[next_arrival] <= now:
             engine.submit(pending.pop(0))
@@ -64,18 +68,26 @@ def _serve_continuous(engine: ServeEngine, reqs, args) -> None:
                 done[f.rid] = f
         elif pending:  # idle until the next Poisson arrival
             time.sleep(min(max(arrivals[next_arrival] - now, 0.0), 0.05))
+    for f in sched.tick():  # announce any final submit-time sheds
+        done[f.rid] = f
     wall = time.monotonic() - t0
     total = 0
     for rid in sorted(done):
         f, m = done[rid], done[rid].metrics
         total += m.n_generated
-        print(f"req {rid}: {f.tokens[:8].tolist()} ... | "
+        print(f"req {rid} [{f.status:>9}]: {f.tokens[:8].tolist()} ... | "
               f"ttft={m.ttft * 1e3:6.1f}ms queue={m.queue_delay * 1e3:5.1f}ms "
               f"tps={m.decode_tps:6.1f} preempt={m.preemptions}")
-    print(f"{len(done)} requests | {total} tokens in {wall:.2f}s "
-          f"({total / wall:.0f} tok/s) | geometries={sched.n_geometries()} "
+    by_status = {}
+    for f in done.values():
+        by_status[f.status] = by_status.get(f.status, 0) + 1
+    status_str = " ".join(f"{s}={n}" for s, n in sorted(by_status.items()))
+    n_ok = by_status.get(STATUS_OK, 0)
+    print(f"{len(done)} requests ({status_str}) | {total} tokens in "
+          f"{wall:.2f}s ({total / wall:.0f} tok/s, "
+          f"{n_ok}/{len(done)} ok) | geometries={sched.n_geometries()} "
           f"decode_executables={engine.decode_cache_size()} "
-          f"ticks={sched.ticks}")
+          f"ticks={sched.ticks} sa_level={engine.sa_level}")
     if engine.prefix_store is not None:
         s = engine.prefix_store.stats()
         hit = sum(done[r].metrics.prefix_hit_tokens for r in done)
@@ -122,6 +134,26 @@ def main() -> None:
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a shared system prompt of this many "
                          "tokens to every request")
+    # SLO guardrails (serve/slo.py); all off by default
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound on the waiting queue; overflow is shed "
+                         "per --shed-policy (0 = unbounded)")
+    ap.add_argument("--shed-policy", choices=SHED_POLICIES,
+                    default=SHED_REJECT_NEWEST,
+                    help="who a full queue rejects")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="default per-request deadline in seconds; "
+                         "expired work retires with status 'timeout' "
+                         "(0 = no deadline)")
+    ap.add_argument("--preemption-budget", type=int, default=-1,
+                    help="max recompute-preemptions per request before "
+                         "it becomes non-evictable (-1 = unbudgeted)")
+    ap.add_argument("--aging-s", type=float, default=0.0,
+                    help="waiting seconds per +1 admission priority "
+                         "(anti-starvation; 0 = no aging)")
+    ap.add_argument("--adaptive-sparsity", action="store_true",
+                    help="bias Layer Router decisions toward SA under "
+                         "queue pressure (load-adaptive sparsity dial)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -132,22 +164,33 @@ def main() -> None:
         params = checkpoint.load(args.load, params)
 
     reqs = _requests(cfg, args)
+    slo = SLOConfig(
+        max_queue=args.max_queue or None,
+        shed_policy=args.shed_policy,
+        default_deadline_s=args.deadline_s or None,
+        preemption_budget=(None if args.preemption_budget < 0
+                           else args.preemption_budget),
+        aging_s=args.aging_s or None,
+        adaptive_sparsity=args.adaptive_sparsity)
     engine = ServeEngine(params, cfg,
                          max_len=(args.prompt_len + args.shared_prefix
                                   + args.gen_len + 8),
                          sparse_decode=not args.dense,
                          prefill_chunk=args.prefill_chunk or None,
                          prefix_cache_mb=args.prefix_cache_mb or None,
-                         prefix_cache_host_mb=args.prefix_cache_host_mb)
+                         prefix_cache_host_mb=args.prefix_cache_host_mb,
+                         slo=slo)
     if args.continuous:
         _serve_continuous(engine, reqs, args)
         return
     t0 = time.time()
-    results = serve_batch(engine, reqs)
+    results = serve_batch_finished(engine, reqs)
     dt = time.time() - t0
     for rid in sorted(results):
-        print(f"req {rid}: {results[rid][:8].tolist()} ...")
-    print(f"{len(reqs)} requests, {args.gen_len} tokens each, "
+        f = results[rid]
+        print(f"req {rid} [{f.status:>7}]: {f.tokens[:8].tolist()} ...")
+    n_ok = sum(f.status == STATUS_OK for f in results.values())
+    print(f"{len(reqs)} requests ({n_ok} ok), {args.gen_len} tokens each, "
           f"{dt:.2f}s wall")
 
 

@@ -218,8 +218,13 @@ def _route_and_attend(bp, cfg: ModelConfig, q, k, v, x_q, ctx,
         pooling = "prefix" if kind == "hard_prefix" else "prefix_suffix"
         r_hard, p_fa = R.hard_route(bp["router"], x_q, flux, pooling)
         # batch-consensus scalar decision (per-request when B=1; the
-        # engine buckets requests by routing pattern otherwise)
-        decision = (jnp.mean(p_fa) > 0.5).astype(jnp.int32)
+        # engine buckets requests by routing pattern otherwise).  The
+        # threshold is a *traced* scalar when the load-adaptive
+        # sparsity dial is engaged (router.sa_biased_threshold) — 0.5
+        # is the paper's argmax, and tracing keeps every dial setting
+        # on one compiled prefill executable.
+        thr = ctx[1] if len(ctx) > 1 else 0.5
+        decision = (jnp.mean(p_fa) > thr).astype(jnp.int32)
     else:  # fixed
         decision = ctx[1]
         p_fa = None
@@ -434,7 +439,8 @@ def forward_train(params, cfg: ModelConfig, tokens: jax.Array, *,
 def prefill(params, cfg: ModelConfig, tokens: jax.Array, *,
             routing_ctx: str = "hard", fixed_pattern=None,
             head_split_n: int = 0, prefix_embeddings=None,
-            encoder_frames=None, want_cache: bool = True) -> ForwardOut:
+            encoder_frames=None, want_cache: bool = True,
+            fa_threshold=None) -> ForwardOut:
     """Serving prefill: hard routing (or a fixed pattern), full KV out.
 
     ``fixed_pattern``: (num_layers,) int array (1=FA, 0=SA) or None.
@@ -444,6 +450,11 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, *,
     pooling — decisions depend only on the first ``pool_size`` tokens,
     so a chunked prefill routing on its first chunk reproduces them
     exactly (DESIGN.md §Prefill pipeline).
+    ``fa_threshold``: traced scalar FA-decision threshold for the hard
+    routing contexts (None = the paper's 0.5 argmax).  The serving
+    engine passes ``router.sa_biased_threshold`` rungs here for the
+    load-adaptive sparsity dial; tracing it keeps one executable
+    across every dial setting.
     """
     B, Stok = tokens.shape
     enc_out = (encode(params, cfg, encoder_frames)
@@ -453,6 +464,8 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, *,
     P = period_len(cfg)
     if fixed_pattern is not None:
         fixed_pattern = jnp.asarray(fixed_pattern).reshape(n_periods(cfg), P)
+    thr = (None if fa_threshold is None
+           else jnp.asarray(fa_threshold, jnp.float32))
 
     def ctx_builder(per_idx, pos):
         if cfg.layer_kinds[pos] != "attn":
@@ -463,7 +476,8 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, *,
             return ("fa_only",)
         if routing_ctx == "fixed":
             return ("fixed", fixed_pattern[per_idx, pos])
-        return ("hard_prefix",) if routing_ctx == "hard_prefix" else ("hard",)
+        key = "hard_prefix" if routing_ctx == "hard_prefix" else "hard"
+        return (key,) if thr is None else (key, thr)
 
     h, rs, caches, auxes = _trunk_scan(params, cfg, h, positions,
                                        ctx_builder, enc_out=enc_out,

@@ -11,6 +11,7 @@ from repro.serve.engine import (  # noqa: F401
     repack_caches,
     seed_caches,
     serve_batch,
+    serve_batch_finished,
 )
 from repro.serve import kv_cache  # noqa: F401
 from repro.serve.prefix_cache import (  # noqa: F401
@@ -22,5 +23,18 @@ from repro.serve.scheduler import (  # noqa: F401
     ContinuousScheduler,
     FinishedRequest,
     RequestMetrics,
+)
+from repro.serve.slo import (  # noqa: F401
+    LoadTracker,
+    SHED_DROP_LOWEST,
+    SHED_POLICIES,
+    SHED_REJECT_NEWEST,
+    SLOConfig,
+    STATUS_CANCELLED,
+    STATUS_FAILED,
+    STATUS_OK,
+    STATUS_SHED,
+    STATUS_TIMEOUT,
+    STATUSES,
 )
 from repro.serve.slots import SlotPool  # noqa: F401

@@ -28,10 +28,12 @@ rows: routing affects prefill only and decode keeps full KV everywhere.
 from __future__ import annotations
 
 import contextlib
+import time
 import warnings
+from collections import Counter
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +47,7 @@ from repro.core import router as RT
 from repro.models import model as MD
 from repro.serve import kv_cache as KC
 from repro.serve import prefix_cache as PXC
+from repro.serve import slo as SLO
 
 
 # ---------------------------------------------------------------------------
@@ -340,6 +343,10 @@ class ChunkedPrefill:
     logits: Optional[jax.Array] = None
     p_fa: Optional[np.ndarray] = None
     reuse: bool = True                     # participate in the prefix store
+    # load-adaptive sparsity rung at admission time (serve/slo.py):
+    # frozen when the job starts so a mid-prefill dial change cannot
+    # split one request across two routing regimes
+    sa_level: int = 0
     prefix_hit_tokens: int = 0             # prompt tokens seeded from a hit
     chunks_streamed: int = 0               # chunks actually computed
     published: int = 0                     # boundary snapshots published
@@ -381,9 +388,17 @@ class ChunkedPrefill:
     def _route_chunk(self, chunk: jax.Array) -> None:
         eng, cfg = self.engine, self.engine.cfg
         routing_ctx, fixed = eng._routing_ctx(self.override)
+        # sparsity dial: bias the hard-routing threshold toward SA at
+        # this job's frozen rung.  Traced (not static), so every rung
+        # shares one prefill executable; level 0 passes None and stays
+        # bit-identical to the dial-free path.
+        thr = (jnp.float32(eng.fa_threshold(self.sa_level))
+               if self.sa_level > 0
+               and routing_ctx in ("hard", "hard_prefix") else None)
         pf = eng._prefill(params=eng.params, tokens=chunk,
                           routing_ctx=routing_ctx, fixed_pattern=fixed,
-                          prefix_embeddings=None, encoder_frames=None)
+                          prefix_embeddings=None, encoder_frames=None,
+                          fa_threshold=thr)
         decisions = (np.asarray(pf.routing)
                      if pf.routing is not None else None)
         self.pattern = eng._pattern(decisions, self.override)
@@ -444,7 +459,8 @@ class ServeEngine:
                  prefill_chunk: Optional[int] = 512,
                  routing_pooling: str = "prefix",
                  prefix_cache_mb: Optional[float] = None,
-                 prefix_cache_host_mb: float = 0.0):
+                 prefix_cache_host_mb: float = 0.0,
+                 slo: Optional[SLO.SLOConfig] = None):
         if routing_pooling not in ("prefix", "prefix_suffix"):
             raise ValueError(
                 f"routing_pooling={routing_pooling!r}: expected 'prefix' "
@@ -464,6 +480,11 @@ class ServeEngine:
         # device budget prefix_cache_mb (+ optional host offload tier)
         self.prefix_store = self._build_prefix_store(
             prefix_cache_mb, prefix_cache_host_mb)
+        # SLO guardrails (serve/slo.py); the default config is all-off.
+        # ``sa_level`` is the load-adaptive sparsity rung — 0 (neutral
+        # argmax routing) unless a scheduler's LoadTracker turns it.
+        self.slo = slo if slo is not None else SLO.SLOConfig()
+        self.sa_level = 0
         self._scheduler = None  # lazy ContinuousScheduler (submit/step)
         # optional decode-attention backend (e.g. the Pallas flash-decode
         # kernel via kernels.decode_attention.make_kernel_decode_attn);
@@ -594,6 +615,21 @@ class ServeEngine:
                              for i in range(cfg.num_layers)], jnp.int32)
         return "fixed", fixed
 
+    # -- load-adaptive sparsity dial (serve/slo.py) -------------------------
+    def set_sa_level(self, level: int) -> None:
+        """Set the sparsity rung for *subsequent* admissions (running
+        jobs keep the rung they started with).  Clamped to the config's
+        quantized ladder, so the reachable pattern — and geometry — set
+        stays finite and the executable guard keeps holding."""
+        self.sa_level = max(0, min(int(level), self.slo.sa_level_max))
+
+    def fa_threshold(self, level: Optional[int] = None) -> float:
+        """FA-decision threshold at ``level`` (default: the current
+        rung) on the config's ladder."""
+        lv = self.sa_level if level is None else level
+        return RT.sa_biased_threshold(lv, step=self.slo.sa_threshold_step,
+                                      max_level=self.slo.sa_level_max)
+
     # -- jit-cache bookkeeping ---------------------------------------------
     def decode_cache_size(self) -> int:
         """Number of compiled decode executables held by this engine."""
@@ -691,7 +727,7 @@ class ServeEngine:
             override=(override if override is not None
                       else self.routing_override),
             plan=chunk_plan(tokens.shape[1], self.prefill_chunk),
-            reuse=reuse)
+            reuse=reuse, sa_level=self.sa_level)
         if (self.prefix_store is not None and reuse
                 and tokens.shape[0] == 1
                 and self.chunked_eligible(tokens.shape[1], job.override)):
@@ -739,7 +775,8 @@ class ServeEngine:
         adopted, ``idx`` advanced past every covered chunk."""
         store, cfg = self.prefix_store, self.cfg
         toks = np.asarray(job.tokens[0])
-        node = store.match(toks, PXC.routing_key(job.override))
+        node = store.match(toks, PXC.routing_key(job.override,
+                                                 job.sa_level))
         if (node is not None and job.override is None
                 and not RT.prefix_routing_reusable(
                     cfg.flux, node.depth, toks.size,
@@ -777,12 +814,14 @@ class ServeEngine:
         toks = np.asarray(job.tokens[0])
         if self.publish_prefix(toks, start + size, job.caches, job.logits,
                                job.pattern, p_fa=job.p_fa,
-                               override=job.override):
+                               override=job.override,
+                               sa_level=job.sa_level):
             job.dispatches += 1  # the snapshot copy
             job.published += 1
 
     def publish_prefix(self, tokens, boundary: int, caches, logits,
-                       pattern, p_fa=None, override=None) -> bool:
+                       pattern, p_fa=None, override=None,
+                       sa_level: int = 0) -> bool:
         """Insert a chunk-boundary snapshot of ``tokens[:boundary]``
         into the prefix store.  Returns True iff a snapshot was
         actually copied and inserted (False: duplicate, non-transferable
@@ -822,7 +861,7 @@ class ServeEngine:
                 self.cfg.flux, boundary, toks.size,
                 routable=self._routable()):
             return False  # decision pooled from tokens past the boundary
-        key = PXC.routing_key(override)
+        key = PXC.routing_key(override, sa_level)
         if store.covered(toks, boundary, key):
             return False  # already published (LRU slot bumped)
         nbytes = PXC.state_bytes(caches, logits)
@@ -860,10 +899,14 @@ class ServeEngine:
         override = (override if override is not None
                     else self.routing_override)
         routing_ctx, fixed = self._routing_ctx(override)
+        thr = (jnp.float32(self.fa_threshold())
+               if self.sa_level > 0
+               and routing_ctx in ("hard", "hard_prefix") else None)
         pf = self._prefill(params=self.params, tokens=tokens,
                            routing_ctx=routing_ctx, fixed_pattern=fixed,
                            prefix_embeddings=prefix_embeddings,
-                           encoder_frames=encoder_frames)
+                           encoder_frames=encoder_frames,
+                           fa_threshold=thr)
         decisions = (np.asarray(pf.routing)
                      if pf.routing is not None else None)
         pattern = self._pattern(decisions, override)
@@ -969,6 +1012,7 @@ class ServeEngine:
         kwargs configure it then — slots_per_bucket, chunk, clock)."""
         if self._scheduler is None:
             from repro.serve.scheduler import ContinuousScheduler
+            kw.setdefault("slo", self.slo)
             self._scheduler = ContinuousScheduler(self, **kw)
         elif kw:
             raise ValueError(
@@ -988,9 +1032,33 @@ class ServeEngine:
         """Tick until every submitted request finished.  Returns a
         ``DrainResult``: the usual {rid: FinishedRequest} mapping plus
         a ``.summary`` with the TTFT split (queue vs prefill), prefix
-        hit accounting, and the KV/prefix-store occupancy split."""
+        hit accounting, per-status counts/rates, and the
+        KV/prefix-store occupancy split."""
         finished = self.scheduler().drain()
         return DrainResult(finished, self._drain_summary(finished))
+
+    def cancel(self, rid: int) -> bool:
+        """Cooperatively cancel a continuous-batching request (status
+        ``cancelled``, partial tokens kept).  False when unknown,
+        already finished, or no scheduler exists yet."""
+        if self._scheduler is None:
+            return False
+        return self._scheduler.cancel(rid)
+
+    def inject_fault(self, rid: int) -> None:
+        """Chaos-engineering hook: poison request ``rid``'s resident
+        decode slot with NaNs (``SlotPool.poison_slot``).  The next
+        tick's non-finite sentinel retires exactly that request with
+        status ``failed`` and returns the slot to the pool; sibling
+        slots continue bitwise-identically (every decode op is
+        row-independent).  Raises ``ValueError`` when ``rid`` is not
+        resident — the hook corrupts live state, so the request must
+        hold a slot (tick until admitted)."""
+        if self._scheduler is None:
+            raise ValueError(
+                "inject_fault: no continuous scheduler exists — submit "
+                "and tick the request into a decode slot first")
+        self._scheduler.inject_fault(rid)
 
     def _drain_summary(self, finished) -> Dict[str, Any]:
         ms = [f.metrics for f in finished.values()]
@@ -1000,12 +1068,24 @@ class ServeEngine:
                                self.prefix_store)
         prompt_tokens = sum(m.prompt_len for m in ms)
         hit_tokens = sum(m.prefix_hit_tokens for m in ms)
+        n = len(ms)
+        # requests retired without a first token carry ttft = NaN —
+        # percentiles are over the requests that actually served
+        status_counts = Counter(f.status for f in finished.values())
 
         def p50(xs: List[float]) -> float:
+            xs = [x for x in xs if np.isfinite(x)]
             return float(np.median(xs)) if xs else float("nan")
 
         return {
-            "n_requests": len(ms),
+            "n_requests": n,
+            "status_counts": {s: status_counts.get(s, 0)
+                              for s in SLO.STATUSES},
+            "shed_rate": (status_counts.get(SLO.STATUS_SHED, 0) / n
+                          if n else 0.0),
+            "timeout_rate": (status_counts.get(SLO.STATUS_TIMEOUT, 0) / n
+                             if n else 0.0),
+            "sa_level": self.sa_level,
             "ttft_p50_s": p50([m.ttft for m in ms]),
             "prefill_time_p50_s": p50([m.prefill_time for m in ms]),
             "slot_wait_p50_s": p50([m.slot_wait for m in ms]),
@@ -1040,6 +1120,11 @@ class Request:
     # seeded from nor published to the engine's prefix store (e.g.
     # privacy-scoped prompts that must not warm other tenants)
     prefix_reuse: bool = True
+    # TTFT/total budget in seconds from submission (None = the
+    # engine's ``slo.default_deadline_s``, which itself defaults to
+    # none).  Expired requests retire with status ``timeout`` at the
+    # next tick boundary, whether queued, mid-prefill, or mid-decode.
+    deadline_s: Optional[float] = None
 
 
 def _trim_eos(tokens: np.ndarray, eos_id: Optional[int]) -> np.ndarray:
@@ -1048,6 +1133,76 @@ def _trim_eos(tokens: np.ndarray, eos_id: Optional[int]) -> np.ndarray:
         return tokens
     hits = np.flatnonzero(tokens == eos_id)
     return tokens[:hits[0] + 1] if hits.size else tokens
+
+
+def serve_batch_finished(engine: ServeEngine, requests: Sequence[Request],
+                         clock: Callable[[], float] = time.monotonic
+                         ) -> Dict[int, "FinishedRequest"]:
+    """``serve_batch`` with the continuous frontend's status lifecycle:
+    every request returns as a ``FinishedRequest`` whose ``status`` is
+    ``ok`` or ``timeout``, so both frontends speak the same vocabulary.
+
+    Deadlines count from the call (the batch frontend has no per-request
+    arrival).  Buckets run whole: a request whose deadline expires
+    before its bucket starts retires ``timeout`` with no tokens; one
+    that expires while its bucket decodes keeps its tokens but is still
+    marked ``timeout`` — the batch frontend cannot stop a fused scan
+    mid-flight, it can only report the SLO miss honestly.  Shedding,
+    preemption and fault quarantine are scheduler concepts and do not
+    apply here.
+    """
+    from repro.serve.scheduler import FinishedRequest, RequestMetrics
+    t0 = clock()
+
+    def _deadline(r: Request) -> Optional[float]:
+        d = (r.deadline_s if r.deadline_s is not None
+             else engine.slo.default_deadline_s)
+        if d is not None and d <= 0:
+            raise ValueError(
+                f"request {r.rid}: deadline_s={d} must be positive — a "
+                f"non-positive deadline is expired at submission")
+        return None if d is None else t0 + d
+
+    buckets: Dict[Tuple, List[Request]] = {}
+    for r in requests:
+        buckets.setdefault((len(r.tokens), r.n_steps, r.routing_override,
+                            r.prefix_reuse), []).append(r)
+    results: Dict[int, FinishedRequest] = {}
+
+    def _finish(r: Request, tokens: np.ndarray, status: str,
+                now: float) -> None:
+        m = RequestMetrics(prompt_len=len(r.tokens),
+                           n_generated=len(tokens), arrival_t=t0,
+                           finish_t=now)
+        if len(tokens):
+            m.admitted_t = t0
+        results[r.rid] = FinishedRequest(
+            rid=r.rid, tokens=np.asarray(tokens, np.int64),
+            routing=None, metrics=m, status=status)
+
+    for (_, n_steps, override, reuse), rs in buckets.items():
+        now = clock()
+        live = []
+        for r in rs:
+            dl = _deadline(r)
+            if dl is not None and now >= dl:
+                _finish(r, np.asarray([], np.int64), SLO.STATUS_TIMEOUT,
+                        now)
+            else:
+                live.append(r)
+        if not live:
+            continue
+        toks = np.stack([r.tokens for r in live])
+        gen = engine.generate(toks, n_steps, routing_override=override,
+                              prefix_reuse=reuse)
+        now = clock()
+        for i, r in enumerate(live):
+            dl = _deadline(r)
+            status = (SLO.STATUS_TIMEOUT if dl is not None and now >= dl
+                      else SLO.STATUS_OK)
+            _finish(r, _trim_eos(gen.tokens[i], r.eos_id), status, now)
+            results[r.rid].routing = gen.routing
+    return results
 
 
 def serve_batch(engine: ServeEngine, requests: Sequence[Request]
@@ -1061,16 +1216,10 @@ def serve_batch(engine: ServeEngine, requests: Sequence[Request]
     Layer routing is per-bucket (batch-consensus inside the model); the
     paper evaluates per-request routing at B=1 — buckets of size 1
     reproduce that exactly.
+
+    Token-only view of ``serve_batch_finished`` — statuses (and any
+    deadline expiries) are dropped; callers that care about the SLO
+    lifecycle should use the finished variant directly.
     """
-    buckets: Dict[Tuple, List[Request]] = {}
-    for r in requests:
-        buckets.setdefault((len(r.tokens), r.n_steps, r.routing_override,
-                            r.prefix_reuse), []).append(r)
-    results: Dict[int, np.ndarray] = {}
-    for (_, n_steps, override, reuse), rs in buckets.items():
-        toks = np.stack([r.tokens for r in rs])
-        gen = engine.generate(toks, n_steps, routing_override=override,
-                              prefix_reuse=reuse)
-        for i, r in enumerate(rs):
-            results[r.rid] = _trim_eos(gen.tokens[i], r.eos_id)
-    return results
+    return {rid: f.tokens
+            for rid, f in serve_batch_finished(engine, requests).items()}

@@ -55,7 +55,7 @@ from repro.configs.base import ModelConfig
 from repro.serve import kv_cache as KC
 
 
-def routing_key(override) -> Tuple:
+def routing_key(override, sa_level: int = 0) -> Tuple:
     """Radix-tree namespace for an admission's routing source.
 
     Router-driven admissions (``override is None``) share one tree;
@@ -63,8 +63,17 @@ def routing_key(override) -> Tuple:
     override is never offered to a request running another (the
     routing-compatibility half of the match check; the other half,
     ``router.prefix_routing_reusable``, guards the router-driven tree).
+
+    Router-driven trees are further scoped by the load-adaptive
+    sparsity rung (``sa_level``, serve/slo.py): a rung change moves the
+    FA-decision threshold, so decisions taken at one rung do not
+    transfer to another — a warm snapshot must never hand a pressured
+    admission the relaxed rung's pattern (or vice versa).  Overrides
+    ignore the dial entirely, so their namespaces stay level-free.
     """
-    return ("router",) if override is None else ("override", tuple(override))
+    if override is not None:
+        return ("override", tuple(override))
+    return ("router", int(sa_level))
 
 
 def state_bytes(caches, logits) -> int:

@@ -1,4 +1,5 @@
-"""Continuous-batching admission/step scheduler (DESIGN.md §Scheduler).
+"""Continuous-batching admission/step scheduler (DESIGN.md §Scheduler,
+§Robustness & SLO).
 
 The engine's ``generate`` serves one request end-to-end; ``serve_batch``
 buckets by exact (length, n_steps) and runs buckets to completion —
@@ -32,6 +33,15 @@ persistent decode batch that requests join and leave per step:
             generated so far (recompute preemption — the standard
             trade of prefill FLOPs for pool memory).
 
+On top of that sits the SLO/robustness layer (serve/slo.py): every
+request retires exactly once with an explicit ``status`` — ``ok``,
+``timeout`` (deadline expired, queued or resident), ``shed`` (bounded
+queue rejected it), ``cancelled`` (cooperative ``cancel``), or
+``failed`` (non-finite decode state quarantined) — and overload walks
+a degradation ladder (shed → budgeted preemption → SA-biased routing)
+instead of falling off a cliff.  All guardrails default OFF; a
+default ``SLOConfig`` reproduces the unguarded scheduler bit-for-bit.
+
 Decoding is greedy: pooled categorical sampling could not reproduce
 the B=1 sampling stream anyway, and greedy pooled decode is *bitwise*
 equal to sequential ``generate`` (asserted in tests) because every op
@@ -48,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve import kv_cache as KC
+from repro.serve import slo as SLO
 from repro.serve.engine import (KVStats, _trim_eos, decode_executable_key,
                                 kv_cache_stats)
 from repro.serve.slots import SlotPool
@@ -95,8 +106,13 @@ class RequestMetrics:
 
     @property
     def ttft(self) -> float:
-        """Time to first token, from arrival."""
-        return (self.first_token_t or self.arrival_t) - self.arrival_t
+        """Time to first token, from arrival.  NaN for a request that
+        never produced one (shed, cancelled, or expired before its
+        first decode chunk) — partial lifecycles must not read as a
+        zero-latency first token in drain summaries."""
+        if self.first_token_t is None:
+            return float("nan")
+        return self.first_token_t - self.arrival_t
 
     @property
     def decode_tps(self) -> float:
@@ -110,8 +126,11 @@ class RequestMetrics:
 class FinishedRequest:
     rid: int
     tokens: np.ndarray           # (n_generated,)
-    routing: Tuple[Any, ...]     # pattern of the final admission
+    # pattern of the final admission; None when the request retired
+    # before ever routing (shed / expired / cancelled in queue)
+    routing: Optional[Tuple[Any, ...]]
     metrics: RequestMetrics
+    status: str = SLO.STATUS_OK  # one of slo.STATUSES
 
 
 @dataclass
@@ -123,6 +142,8 @@ class _InFlight:
     pattern: Optional[Tuple[Any, ...]] = None
     pool_key: Optional[Tuple] = None
     slot: int = -1
+    # absolute expiry time in the clock domain (None = no deadline)
+    deadline_t: Optional[float] = None
     # in-flight chunked prefill (engine.ChunkedPrefill); advanced by the
     # tick's prefill budget, packed into a slot once done.  A finished
     # job whose bucket is full simply waits — its caches are already
@@ -143,16 +164,29 @@ class ContinuousScheduler:
     ``prefill_chunks_per_tick``: prefill chunks streamed per tick across
     all in-flight admissions — the prefill scheduling quantum.
     ``clock``: injectable time source (tests pass a virtual clock).
+    ``slo``: guardrail config (serve/slo.py); defaults to all-off.
     """
 
     def __init__(self, engine, *, slots_per_bucket: int = 4,
                  chunk: int = 8, prefill_chunks_per_tick: int = 1,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 slo: Optional[SLO.SLOConfig] = None):
         if engine.cfg.num_encoder_layers or engine.cfg.num_prefix_tokens:
             raise ValueError(
                 "continuous batching supports decoder-only text requests; "
                 "encoder/prefix modalities carry per-request side inputs "
                 "the slot pool does not hold yet")
+        if slots_per_bucket < 1:
+            raise ValueError(
+                f"slots_per_bucket={slots_per_bucket} must be >= 1: a "
+                f"zero-capacity pool can never admit, so every request "
+                f"would wait forever (drain would spin to its progress "
+                f"guard instead of serving)")
+        if chunk < 1:
+            raise ValueError(
+                f"chunk={chunk} must be >= 1 decode step per tick: a "
+                f"zero-step scan generates no tokens and no request can "
+                f"ever finish")
         if prefill_chunks_per_tick < 1:
             raise ValueError(
                 f"prefill_chunks_per_tick={prefill_chunks_per_tick} must "
@@ -165,9 +199,16 @@ class ContinuousScheduler:
         self.chunk = int(chunk)
         self.prefill_chunks_per_tick = int(prefill_chunks_per_tick)
         self.clock = clock
+        self.slo = slo if slo is not None else SLO.SLOConfig()
+        # one source of truth for the sparsity ladder: the engine's
+        # dial (generate() + chunked admissions) follows this config
+        engine.slo = self.slo
+        self.load = SLO.LoadTracker(self.slo)
         self.waiting: List[_InFlight] = []
         self.pools: Dict[Tuple, SlotPool] = {}
         self.finished: List[FinishedRequest] = []
+        self.closed = False           # set by drain(); submit then raises
+        self._announce: List[FinishedRequest] = []  # retired since last tick
         self._rng = jax.random.key(0)
         self.ticks = 0
         self.tokens_generated = 0
@@ -175,7 +216,19 @@ class ContinuousScheduler:
 
     # -- submission --------------------------------------------------------
     def submit(self, req) -> int:
-        """Queue a request (``serve.Request``); returns its rid."""
+        """Queue a request (``serve.Request``); returns its rid.
+
+        A bounded queue (``slo.max_queue``) may retire the arrival — or
+        a lower-priority waiter — immediately with status ``shed``;
+        the retirement is announced by the next ``tick`` and appears in
+        ``drain`` like any other terminal state.
+        """
+        if self.closed:
+            raise ValueError(
+                f"submit after drain: request {req.rid} would queue on a "
+                f"drained scheduler that no longer ticks, and would "
+                f"silently never be served — create a new scheduler (or "
+                f"submit before draining)")
         if len(req.tokens) > self.engine.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt length {len(req.tokens)} "
@@ -190,10 +243,139 @@ class ContinuousScheduler:
                 f"capacity max_len={self.engine.max_len}; slot-pool rows "
                 f"past capacity would silently drop KV writes (and a "
                 f"preemption-recompute would crash mid-drain)")
+        deadline = getattr(req, "deadline_s", None)
+        if deadline is not None and deadline <= 0:
+            raise ValueError(
+                f"request {req.rid}: deadline_s={deadline} must be "
+                f"positive — a non-positive deadline is expired at "
+                f"submission and can never be served")
+        if deadline is None:
+            deadline = self.slo.default_deadline_s
+        now = self.clock()
         inf = _InFlight(req=req, metrics=RequestMetrics(
-            prompt_len=len(req.tokens), arrival_t=self.clock()))
+            prompt_len=len(req.tokens), arrival_t=now),
+            deadline_t=(now + deadline) if deadline is not None else None)
+        if (self.slo.max_queue is not None
+                and len(self.waiting) >= self.slo.max_queue):
+            victim = self._shed_victim(inf)
+            if victim is not inf:
+                self.waiting.remove(victim)
+                self.waiting.append(inf)
+            self._retire(victim, SLO.STATUS_SHED, now)
+            return req.rid
         self.waiting.append(inf)
         return req.rid
+
+    def _shed_victim(self, inf: _InFlight) -> _InFlight:
+        """Pick who the over-bound queue rejects: the arrival itself
+        (``reject_newest``) or the lowest-priority waiter when the
+        arrival strictly outranks it (``drop_lowest_priority``; ties
+        shed the arrival, so equal-priority waiters keep FIFO order)."""
+        if self.slo.shed_policy == SLO.SHED_REJECT_NEWEST:
+            return inf
+        victim = min(self.waiting,
+                     key=lambda w: (w.req.priority, -w.metrics.arrival_t))
+        return victim if victim.req.priority < inf.req.priority else inf
+
+    # -- terminal transitions ----------------------------------------------
+    def _retire(self, inf: _InFlight, status: str, now: float, *,
+                pool: Optional[SlotPool] = None,
+                slot: Optional[int] = None) -> FinishedRequest:
+        """The single terminal transition: every request leaves the
+        scheduler through here exactly once, with an explicit status
+        and whatever tokens it generated before retiring.  Frees the
+        decode slot when the request was resident."""
+        m = inf.metrics
+        m.finish_t = now
+        m.n_generated = len(inf.generated)
+        inf.job = None
+        if pool is not None and slot is not None:
+            pool.active.pop(slot)
+            pool.free.append(slot)
+            inf.slot, inf.pool_key = -1, None
+        f = FinishedRequest(rid=inf.req.rid,
+                            tokens=np.asarray(inf.generated, np.int64),
+                            routing=inf.pattern, metrics=m, status=status)
+        self.finished.append(f)
+        self._announce.append(f)
+        return f
+
+    def cancel(self, rid: int) -> bool:
+        """Cooperative cancellation: retire ``rid`` with status
+        ``cancelled`` (partial tokens kept).  A resident request leaves
+        at the current tick boundary — its slot frees immediately and
+        is overwritten by the next admission.  Returns False when the
+        rid is unknown or already finished."""
+        now = self.clock()
+        for inf in self.waiting:
+            if inf.req.rid == rid:
+                self.waiting.remove(inf)
+                self._retire(inf, SLO.STATUS_CANCELLED, now)
+                return True
+        for pool in self.pools.values():
+            for slot, inf in list(pool.active.items()):
+                if inf.req.rid == rid:
+                    self._retire(inf, SLO.STATUS_CANCELLED, now,
+                                 pool=pool, slot=slot)
+                    return True
+        return False
+
+    def inject_fault(self, rid: int) -> None:
+        """Chaos hook (see ``ServeEngine.inject_fault``): poison the
+        resident decode state of ``rid`` with NaNs.  The next decode
+        chunk's non-finite sentinel quarantines exactly that slot
+        (status ``failed``); sibling slots must stay bitwise identical
+        to an unfaulted run (chaos-tested)."""
+        for pool in self.pools.values():
+            for slot, inf in pool.active.items():
+                if inf.req.rid == rid:
+                    pool.poison_slot(slot)
+                    return
+        raise ValueError(
+            f"inject_fault: request {rid} is not resident in any decode "
+            f"slot (still waiting, already finished, or unknown) — the "
+            f"fault hook poisons live slot state, so admit the request "
+            f"first (tick until it holds a slot)")
+
+    def _expire(self, now: float) -> None:
+        """Retire everything past its deadline — queued (possibly
+        mid-prefill: the in-flight job is simply dropped) and resident
+        alike.  Cooperative by construction: expiry is checked at tick
+        boundaries, so a resident request finishes its current decode
+        chunk and keeps the tokens generated before the boundary."""
+        keep = []
+        for inf in self.waiting:
+            if inf.deadline_t is not None and now >= inf.deadline_t:
+                self._retire(inf, SLO.STATUS_TIMEOUT, now)
+            else:
+                keep.append(inf)
+        self.waiting = keep
+        for pool in self.pools.values():
+            for slot, inf in list(pool.active.items()):
+                if inf.deadline_t is not None and now >= inf.deadline_t:
+                    self._retire(inf, SLO.STATUS_TIMEOUT, now,
+                                 pool=pool, slot=slot)
+
+    # -- priorities: aging + preemption budget ------------------------------
+    def _eff_priority(self, inf: _InFlight, now: float) -> float:
+        """Admission priority with anti-starvation aging: a waiter gains
+        one priority unit per ``aging_s`` seconds, so a much-preempted
+        victim eventually outranks fresh arrivals for free slots.
+        Aging is deliberately *admission-only* — ``_preempt`` compares
+        raw priorities, so two aged requests can never enter a
+        mutual-eviction ping-pong."""
+        if self.slo.aging_s is None:
+            return float(inf.req.priority)
+        return (inf.req.priority
+                + (now - inf.metrics.arrival_t) / self.slo.aging_s)
+
+    def _evictable(self, inf: _InFlight) -> bool:
+        """Preemption budget: once a request has been recompute-preempted
+        ``slo.preemption_budget`` times it becomes non-evictable, so a
+        preemption storm ends in its admission, not a livelock of
+        re-prefills."""
+        budget = self.slo.preemption_budget
+        return budget is None or inf.metrics.preemptions < budget
 
     # -- admission ---------------------------------------------------------
     def _prefill_tokens(self, inf: _InFlight) -> np.ndarray:
@@ -205,7 +387,8 @@ class ContinuousScheduler:
                                np.asarray(inf.generated, np.int32)])
 
     def _has_victim(self, pool: SlotPool, priority: int) -> bool:
-        return any(v.req.priority < priority for v in pool.active.values())
+        return any(v.req.priority < priority and self._evictable(v)
+                   for v in pool.active.values())
 
     def _prefill_work(self, pending: List[_InFlight]) -> None:
         """Stream up to ``prefill_chunks_per_tick`` chunks across the
@@ -302,11 +485,18 @@ class ContinuousScheduler:
         return True
 
     def _preempt(self, pool: SlotPool, priority: int) -> Optional[int]:
-        """Evict the lowest-priority active slot if it is strictly below
-        ``priority``; the victim re-queues for recompute admission."""
+        """Evict the lowest-priority *evictable* active slot if it is
+        strictly below ``priority``; the victim re-queues for recompute
+        admission.  Budget-exhausted slots (``_evictable`` False) are
+        skipped — they already paid ``slo.preemption_budget`` recompute
+        prefills and now run to completion."""
+        cands = [(s, v) for s, v in pool.active.items()
+                 if self._evictable(v)]
+        if not cands:
+            return None
         slot, victim = min(
-            pool.active.items(),
-            key=lambda kv: (kv[1].req.priority, -kv[1].metrics.arrival_t))
+            cands, key=lambda kv: (kv[1].req.priority,
+                                   -kv[1].metrics.arrival_t))
         if victim.req.priority >= priority:
             return None
         pool.active.pop(slot)
@@ -323,23 +513,32 @@ class ContinuousScheduler:
 
     # -- one scheduling tick -----------------------------------------------
     def tick(self) -> List[FinishedRequest]:
-        """Stream prefill chunks, admit finished admissions, decode one
-        chunk per bucket, retire finished slots.  Returns the requests
-        that finished this tick."""
+        """Expire deadlines, adjust the sparsity dial, stream prefill
+        chunks, admit finished admissions, decode one chunk per bucket,
+        retire finished slots, quarantine non-finite ones.  Returns
+        every request that retired since the last tick (including
+        submission-time sheds)."""
         eng = self.engine
         self.ticks += 1
-        # admit in priority order, oldest first within a priority.
-        # _admit may re-queue preemption victims onto self.waiting, so
-        # iterate a snapshot and let victims wait for the next tick.
-        pending = sorted(self.waiting, key=lambda i: (-i.req.priority,
-                                                      i.metrics.arrival_t))
+        now = self.clock()
+        self._expire(now)
+        if self.slo.adaptive_sparsity:
+            cap = sum(p.capacity for p in self.pools.values())
+            eng.set_sa_level(self.load.observe(
+                len(self.waiting), cap or self.slots_per_bucket))
+        # admit in (aged) priority order, oldest first within a
+        # priority.  _admit may re-queue preemption victims onto
+        # self.waiting, so iterate a snapshot and let victims wait for
+        # the next tick.
+        pending = sorted(self.waiting,
+                         key=lambda i: (-self._eff_priority(i, now),
+                                        i.metrics.arrival_t))
         self._prefill_work(pending)
         self.waiting = []
         for inf in pending:
             if not self._admit(inf):
                 self.waiting.append(inf)
 
-        done: List[FinishedRequest] = []
         for key, pool in self.pools.items():
             if not pool.active:
                 continue
@@ -355,9 +554,19 @@ class ContinuousScheduler:
             pool.logits, pool.caches = logits, caches
             pool.advance(self.chunk)
             toks_np = np.asarray(toks)  # (capacity, chunk)
+            # non-finite sentinel: one reduced (capacity,) bool per tick.
+            # Fault isolation is slot-granular — a poisoned row retires
+            # as ``failed`` (its garbage chunk discarded) while sibling
+            # rows proceed untouched; every decode op is row-independent
+            # so their streams are bitwise those of an unfaulted run.
+            finite = np.asarray(jnp.all(jnp.isfinite(pool.logits), axis=-1))
             now = self.clock()
             for slot in sorted(pool.active):
                 inf = pool.active[slot]
+                if not finite[slot]:
+                    self._retire(inf, SLO.STATUS_FAILED, now,
+                                 pool=pool, slot=slot)
+                    continue
                 if not inf.generated:
                     inf.metrics.first_token_t = now
                 take = min(self.chunk,
@@ -368,20 +577,17 @@ class ContinuousScheduler:
                 inf.generated.extend(new)
                 self.tokens_generated += len(new)
                 if eos_hit or len(inf.generated) >= inf.req.n_steps:
-                    inf.metrics.finish_t = now
-                    inf.metrics.n_generated = len(inf.generated)
-                    done.append(FinishedRequest(
-                        rid=inf.req.rid,
-                        tokens=np.asarray(inf.generated, np.int64),
-                        routing=inf.pattern, metrics=inf.metrics))
-                    pool.active.pop(slot)
-                    pool.free.append(slot)
+                    self._retire(inf, SLO.STATUS_OK, now,
+                                 pool=pool, slot=slot)
         eng._check_executable_guard()
-        self.finished.extend(done)
+        done, self._announce = self._announce, []
         return done
 
     def drain(self) -> Dict[int, FinishedRequest]:
-        """Tick until every submitted request has finished."""
+        """Tick until every submitted request has retired (finished,
+        shed, expired, cancelled, or quarantined), then close the
+        scheduler: further ``submit`` calls raise instead of queueing
+        on a scheduler nothing will ever tick again."""
         guard = 0
         while self.waiting or any(p.active for p in self.pools.values()):
             before = (self.tokens_generated, self.n_active(),
@@ -397,6 +603,7 @@ class ContinuousScheduler:
                     "completions) for 10k ticks — a request can neither "
                     "finish nor admit (check slots_per_bucket and "
                     "priorities)")
+        self.closed = True
         return {f.rid: f for f in self.finished}
 
     # -- introspection ------------------------------------------------------

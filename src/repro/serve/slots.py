@@ -84,6 +84,24 @@ class SlotPool:
             self.caches, self.logits, self.pos, req_caches, req_logits,
             jnp.int32(seq_len), jnp.int32(slot))
 
+    def poison_slot(self, slot: int) -> None:
+        """Chaos-engineering hook: overwrite row ``slot`` of every
+        floating-point cache leaf (and its last-logits row) with NaN —
+        the persistent-corruption shape of a real fault (a poisoned KV
+        row keeps producing non-finite logits every step, so the
+        scheduler's per-tick sentinel is guaranteed to see it).
+        Integer bookkeeping (``positions``/``length``) is left intact:
+        the faulted row must keep decoding self-consistent garbage so
+        sibling rows see the exact same shapes and masks as in an
+        unfaulted run.  The next admission's ``_write_slot`` overwrites
+        the whole row, so a quarantined slot is safe to reuse."""
+        def nanify(leaf):
+            if jnp.issubdtype(leaf.dtype, jnp.floating):
+                return leaf.at[slot].set(jnp.nan)
+            return leaf
+        self.caches = jax.tree.map(nanify, self.caches)
+        self.logits = self.logits.at[slot].set(jnp.nan)
+
     def advance(self, steps: int) -> None:
         """Advance active rows by ``steps`` decode positions; park free
         rows at 0 so their garbage decode never runs past the buffers."""
