@@ -30,7 +30,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import jax
 import numpy as np
 
-from benchmarks.common import CACHE_DIR, Row, bench_cfg, mixed_pattern
+from benchmarks.common import (CACHE_DIR, Row, bench_cfg, device_sync,
+                               mixed_pattern, pct)
 from repro.models import model as MD
 from repro.serve import ContinuousScheduler, Request, ServeEngine
 
@@ -56,10 +57,6 @@ def _arrivals(n: int, mean_gap_s: float, seed: int = 1) -> np.ndarray:
     return np.cumsum(rng.exponential(mean_gap_s, size=n))
 
 
-def _pct(xs: List[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
-
-
 def _run_batch(eng: ServeEngine, reqs: List[Request],
                arrivals: np.ndarray) -> Dict:
     """serve_batch semantics with per-bucket timing: serving starts once
@@ -82,7 +79,7 @@ def _run_batch(eng: ServeEngine, reqs: List[Request],
         ttft.extend(t - arrivals[i] for i in idxs)
     return {"tokens": tokens, "busy_s": busy,
             "tokens_per_sec": tokens / busy,
-            "ttft_p50_s": _pct(ttft, 50), "ttft_p95_s": _pct(ttft, 95)}
+            "ttft_p50_s": pct(ttft, 50), "ttft_p95_s": pct(ttft, 95)}
 
 
 def _run_continuous(eng: ServeEngine, reqs: List[Request],
@@ -105,14 +102,18 @@ def _run_continuous(eng: ServeEngine, reqs: List[Request],
                 done[f.rid] = f
         elif pending:  # idle until the next Poisson arrival
             time.sleep(min(max(arrivals[pending[0]] - now, 0.0), 0.005))
+    # measurement boundary (common.py docstring): every tick already
+    # synced on np.asarray(toks), but close the interval on an explicit
+    # barrier so in-flight device work cannot leak past the stop-clock
+    device_sync()
     busy = time.perf_counter() - t0
     tokens = sum(f.metrics.n_generated for f in done.values())
     ttft = [f.metrics.ttft for f in done.values()]
     qd = [f.metrics.queue_delay for f in done.values()]
     return {"tokens": tokens, "busy_s": busy,
             "tokens_per_sec": tokens / busy,
-            "ttft_p50_s": _pct(ttft, 50), "ttft_p95_s": _pct(ttft, 95),
-            "queue_delay_p50_s": _pct(qd, 50),
+            "ttft_p50_s": pct(ttft, 50), "ttft_p95_s": pct(ttft, 95),
+            "queue_delay_p50_s": pct(qd, 50),
             "geometries": sched.n_geometries(),
             "decode_executables": eng.decode_cache_size(),
             "ticks": sched.ticks}
@@ -155,12 +156,48 @@ def run(n_requests: int = 16, n_steps: int = 128, slots: int = 16,
             cont = c
 
     speedup = cont["tokens_per_sec"] / batch["tokens_per_sec"]
+
+    # telemetry overhead leg: the same continuous workload with the
+    # metrics registry + span tracer + flight recorder enabled.  The
+    # acceptance bar (ISSUE 7 / DESIGN.md §Observability) is zero extra
+    # compiled executables and ≤5% tok/s overhead.
+    eng_t = ServeEngine(params, cfg, max_len=max_len,
+                        routing_override=pattern, telemetry=True)
+    _run_continuous(eng_t, reqs, arrivals, slots=slots, chunk=chunk)
+    # overhead is measured with every request submitted up front: the
+    # off and on runs then execute the *identical* tick/batch sequence
+    # (the telemetry parity test proves bitwise-equal tokens), so the
+    # ratio isolates instrumentation cost instead of folding in the
+    # Poisson arrival/tick-phase coupling of the wall-clock workload.
+    # Pairs alternate order within each rep so host drift cancels too.
+    now_arrivals = np.zeros_like(arrivals)
+    tele = ref = None
+    for r in range(2 * reps):
+        pair = [(eng_c, False), (eng_t, True)]
+        if r % 2:
+            pair.reverse()
+        for eng, is_tele in pair:
+            m = _run_continuous(eng, reqs, now_arrivals, slots=slots,
+                                chunk=chunk)
+            best = tele if is_tele else ref
+            if best is None or m["tokens_per_sec"] > best["tokens_per_sec"]:
+                if is_tele:
+                    tele = m
+                else:
+                    ref = m
+    overhead = max(0.0, 1.0 - tele["tokens_per_sec"]
+                   / ref["tokens_per_sec"])
+    extra_execs = (eng_t.decode_cache_size() - eng_c.decode_cache_size())
+
     results = {
         "n_requests": n_requests, "n_steps": n_steps,
         "prompt_lens": list(LENS), "slots_per_bucket": slots,
         "chunk": chunk, "mean_arrival_gap_s": mean_gap_s,
         "serve_batch": batch, "continuous": cont,
         "throughput_speedup": speedup,
+        "continuous_telemetry": tele,
+        "telemetry_overhead_frac": overhead,
+        "telemetry_extra_executables": extra_execs,
     }
     os.makedirs(CACHE_DIR, exist_ok=True)
     with open(os.path.join(CACHE_DIR, "BENCH_serving.json"), "w") as f:
@@ -179,6 +216,10 @@ def run(n_requests: int = 16, n_steps: int = 128, slots: int = 16,
             f"speedup={speedup:.2f}x;"
             f"geoms={cont['geometries']};"
             f"execs={cont['decode_executables']}"),
+        Row("continuous-batching/telemetry-on", tele["busy_s"] * 1e6,
+            f"tps={tele['tokens_per_sec']:.0f};"
+            f"overhead={overhead:.1%};"
+            f"extra_execs={extra_execs}"),
     ]
     return rows
 
@@ -198,6 +239,17 @@ def main() -> None:
               + (" (smoke shapes — advisory)" if smoke else ""))
     else:
         print(f"# ok continuous-batching speedup {speedup:.2f}x")
+    overhead = data["results"]["telemetry_overhead_frac"]
+    extra = data["results"]["telemetry_extra_executables"]
+    if extra:
+        print(f"# WARN telemetry added {extra} compiled executables "
+              f"(must be 0)")
+    if overhead > 0.05:
+        print(f"# WARN telemetry overhead {overhead:.1%} > 5%"
+              + (" (smoke shapes — advisory)" if smoke else ""))
+    else:
+        print(f"# ok telemetry overhead {overhead:.1%} "
+              f"(extra executables: {extra})")
 
 
 if __name__ == "__main__":

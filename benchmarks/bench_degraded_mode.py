@@ -35,7 +35,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import jax
 import numpy as np
 
-from benchmarks.common import CACHE_DIR, Row, bench_cfg
+from benchmarks.common import CACHE_DIR, Row, bench_cfg, device_sync, pct
 from repro.models import model as MD
 from repro.serve import (ContinuousScheduler, Request, SLOConfig,
                          STATUS_OK, ServeEngine, STATUSES)
@@ -52,11 +52,6 @@ def _requests(cfg, n: int, n_steps: int, rid0: int = 0,
                                         ).astype(np.int32),
                     n_steps=n_steps)
             for i in range(n)]
-
-
-def _pct(xs: List[float], q: float) -> float:
-    xs = [x for x in xs if np.isfinite(x)]
-    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
 
 
 def _sa_fraction(routing) -> float:
@@ -81,6 +76,7 @@ def _run_burst(eng: ServeEngine, reqs: List[Request], *,
             done[f.rid] = f
     for f in sched.tick():  # announce any submit-time sheds
         done[f.rid] = f
+    device_sync()  # measurement boundary (common.py docstring)
     wall = time.perf_counter() - t0
     ttft = [f.metrics.ttft for f in done.values()]
     status_counts = {s: sum(f.status == s for f in done.values())
@@ -96,7 +92,7 @@ def _run_burst(eng: ServeEngine, reqs: List[Request], *,
         "n_requests": len(reqs), "wall_s": wall, "tokens": tokens,
         "goodput_tokens_per_sec": good_tokens / wall,
         "tokens_per_sec": tokens / wall,
-        "ttft_p50_s": _pct(ttft, 50), "ttft_p99_s": _pct(ttft, 99),
+        "ttft_p50_s": pct(ttft, 50), "ttft_p99_s": pct(ttft, 99),
         "status_counts": status_counts,
         "served_fraction": (status_counts[STATUS_OK] / len(reqs)
                             if reqs else 0.0),

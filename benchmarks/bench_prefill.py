@@ -35,7 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import CACHE_DIR, Row, bench_cfg, mixed_pattern
+from benchmarks.common import (CACHE_DIR, Row, bench_cfg, device_sync,
+                               mixed_pattern, pct)
 from repro.models import model as MD
 from repro.serve import ContinuousScheduler, Request, ServeEngine
 
@@ -144,15 +145,16 @@ def bench_ttft(cfg, params, long_len: int, chunk: int,
             elif pending:
                 time.sleep(min(max(arrivals[pending[0]] - now, 0.0),
                                0.005))
+        device_sync()  # measurement boundary (common.py docstring)
         ttft = sorted(f.metrics.ttft for f in done.values())
         return {
             "wall_s": time.perf_counter() - t0,
-            "ttft_p50_s": float(np.percentile(ttft, 50)),
-            "ttft_p95_s": float(np.percentile(ttft, 95)),
+            "ttft_p50_s": pct(ttft, 50),
+            "ttft_p95_s": pct(ttft, 95),
             # max tick duration = worst decode stall a resident request
             # sees while admissions happen (the mixed-tick claim)
             "max_tick_s": float(max(tick_s)),
-            "p95_tick_s": float(np.percentile(tick_s, 95)),
+            "p95_tick_s": pct(tick_s, 95),
             "prefill_chunk_ticks": sched.prefill_chunk_ticks,
         }
 

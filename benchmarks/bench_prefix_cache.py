@@ -30,7 +30,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import jax
 import numpy as np
 
-from benchmarks.common import CACHE_DIR, Row, bench_cfg
+from benchmarks.common import (CACHE_DIR, Row, bench_cfg, device_sync,
+                               pct)
 from repro.models import model as MD
 from repro.serve import ContinuousScheduler, Request, ServeEngine
 
@@ -123,13 +124,14 @@ def bench_traffic(cfg, params, chunk: int, n_prefix_chunks: int = 3,
             elif pending:
                 time.sleep(min(max(arrivals[pending[0]] - now, 0.0),
                                0.005))
+        device_sync()  # measurement boundary (common.py docstring)
         ttft = sorted(f.metrics.ttft for f in done.values())
         hit = sum(f.metrics.prefix_hit_tokens for f in done.values())
         prompt_toks = sum(f.metrics.prompt_len for f in done.values())
         return {
             "wall_s": time.perf_counter() - t0,
-            "ttft_p50_s": float(np.percentile(ttft, 50)),
-            "ttft_p95_s": float(np.percentile(ttft, 95)),
+            "ttft_p50_s": pct(ttft, 50),
+            "ttft_p95_s": pct(ttft, 95),
             "tokens_per_s": sum(f.metrics.n_generated
                                 for f in done.values())
             / max(time.perf_counter() - t0, 1e-9),

@@ -1,11 +1,24 @@
 """Shared benchmark context: a tiny flux model trained on the synthetic
-mixture (cached across benches), timing helpers, CSV rows."""
+mixture (cached across benches), timing helpers, CSV rows.
+
+Measurement-boundary convention: jax dispatch is asynchronous, so any
+wall-clock interval that brackets device work MUST end on an explicit
+synchronization or the tail of the device time leaks into whatever is
+timed next (async-dispatch bias).  ``time_call`` blocks on its own
+output; phase-structured loops (e.g. "drain the scheduler, then stop
+the clock") call ``device_sync`` at each boundary instead.  Every timer
+in benchmarks/ follows this convention — new benches should too.
+
+All BENCH_*.json / CSV outputs land under ``CACHE_DIR``
+(artifacts/bench/ at the repo root, an absolute path so it does not
+depend on the cwd); CI uploads that directory as one artifact.
+"""
 from __future__ import annotations
 
 import os
 import time
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -14,11 +27,38 @@ import numpy as np
 from repro.configs import get_config, smoke_variant
 from repro.data import SyntheticTasks, mixture_iterator
 from repro.models import model as MD
+from repro.serve.telemetry import quantile, summarize  # noqa: F401
 from repro.train import PretrainTrainer, RouterTrainer, checkpoint
 
 CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                          "bench")
 SEQ = 96
+
+
+def device_sync(*trees) -> None:
+    """Barrier at a measurement boundary: block until every array in
+    ``trees`` (or, with no arguments, all live device arrays) has
+    materialized, so the interval being closed actually contains its
+    device work.  Host-side no-op when nothing is pending."""
+    if trees:
+        jax.block_until_ready(trees)
+        return
+    arrs = list(jax.live_arrays())
+    if arrs:
+        jax.block_until_ready(arrs)
+
+
+def pct(xs: Iterable[float], q: float) -> float:
+    """q-th percentile (0..100), NaN-filtered — the one percentile
+    helper the benches share (serve.telemetry.quantile, the same
+    estimator the metrics registry's digests use)."""
+    return quantile(xs, q)
+
+
+def latency_summary(xs: Iterable[float],
+                    qs: Sequence[float] = (50, 95, 99)) -> Dict[str, float]:
+    """{"p50": …, "p95": …, "p99": …} digest of a latency sample."""
+    return summarize(xs, qs)
 
 
 @dataclass

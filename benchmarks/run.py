@@ -16,6 +16,7 @@ from benchmarks import (bench_continued_training,  # noqa: E402
                         bench_router_overhead, bench_ruler_proxy,
                         bench_sparsity_sweep, bench_target_sparsity,
                         roofline)
+from benchmarks.common import CACHE_DIR  # noqa: E402
 
 BENCHES = [
     ("Table1/LongBench-E", bench_longbench_proxy),
@@ -52,8 +53,11 @@ def main() -> None:
             print(r.csv(), flush=True)
             out_lines.append(r.csv())
         print(f"# {label} done in {time.time() - t0:.1f}s", flush=True)
-    os.makedirs("artifacts/bench", exist_ok=True)
-    with open("artifacts/bench/results.csv", "w") as f:
+    # every BENCH_*.json a bench writes already lands under CACHE_DIR
+    # (an absolute artifacts/bench/ path); the summary CSV goes to the
+    # same place so CI uploads the directory as one artifact
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    with open(os.path.join(CACHE_DIR, "results.csv"), "w") as f:
         f.write("\n".join(out_lines) + "\n")
 
 

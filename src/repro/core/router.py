@@ -117,6 +117,21 @@ def sa_biased_threshold(level: int, *, step: float = 0.15,
     return min(0.5 + lv * float(step), 0.999)
 
 
+def decision_margin(p_fa: float, level: int, *, step: float = 0.15,
+                    max_level: int = 3) -> float:
+    """Signed score-vs-threshold margin of one hard routing decision:
+    ``p_fa`` minus the rung's ``sa_biased_threshold`` (positive = the
+    FA side of the cut, level 0 = the paper's 0.5 argmax).
+
+    The serving telemetry observes this per routed layer at admission
+    time (``flux_router_margin`` in DESIGN.md §Observability): a margin
+    distribution hugging zero means the router is deciding on a knife
+    edge — exactly the layers a sparsity-rung change will flip.
+    """
+    return float(p_fa) - sa_biased_threshold(level, step=step,
+                                             max_level=max_level)
+
+
 def prefix_routing_reusable(flux: FluxConfig, prefix_len: int,
                             seq_len: int, *, pooling: str = "prefix",
                             routable: bool = True) -> bool:

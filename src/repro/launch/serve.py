@@ -6,6 +6,11 @@
     # continuous batching: Poisson arrivals into the slot-pool scheduler
     PYTHONPATH=src python -m repro.launch.serve \
         --arch phi3-mini-3.8b --smoke --continuous --requests 8
+
+    # with telemetry: Prometheus text + Perfetto trace of the drain
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch phi3-mini-3.8b --smoke --continuous --requests 8 \
+        --metrics-out metrics.prom --trace-out trace.json
 """
 from __future__ import annotations
 
@@ -99,6 +104,19 @@ def _serve_continuous(engine: ServeEngine, reqs, args) -> None:
               f"snapshots={s.snapshots}")
 
 
+def _write_telemetry(engine: ServeEngine, args) -> None:
+    """Export the run's telemetry to the paths the flags named (no-op
+    when neither flag was passed)."""
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(engine.metrics_text())
+        print(f"metrics → {args.metrics_out}")
+    if args.trace_out:
+        engine.export_trace(args.trace_out)
+        print(f"trace   → {args.trace_out} "
+              f"(open in https://ui.perfetto.dev)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ALL_ARCHS, required=True)
@@ -154,6 +172,14 @@ def main() -> None:
     ap.add_argument("--adaptive-sparsity", action="store_true",
                     help="bias Layer Router decisions toward SA under "
                          "queue pressure (load-adaptive sparsity dial)")
+    # telemetry (DESIGN.md §Observability); either flag enables it
+    ap.add_argument("--metrics-out", default=None,
+                    help="write Prometheus text exposition of the run's "
+                         "metrics here (enables engine telemetry)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the request-span Chrome-trace/Perfetto "
+                         "JSON here (enables engine telemetry; open in "
+                         "https://ui.perfetto.dev)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -172,6 +198,7 @@ def main() -> None:
                            else args.preemption_budget),
         aging_s=args.aging_s or None,
         adaptive_sparsity=args.adaptive_sparsity)
+    telemetry = bool(args.metrics_out or args.trace_out)
     engine = ServeEngine(params, cfg,
                          max_len=(args.prompt_len + args.shared_prefix
                                   + args.gen_len + 8),
@@ -179,9 +206,10 @@ def main() -> None:
                          prefill_chunk=args.prefill_chunk or None,
                          prefix_cache_mb=args.prefix_cache_mb or None,
                          prefix_cache_host_mb=args.prefix_cache_host_mb,
-                         slo=slo)
+                         slo=slo, telemetry=telemetry)
     if args.continuous:
         _serve_continuous(engine, reqs, args)
+        _write_telemetry(engine, args)
         return
     t0 = time.time()
     results = serve_batch_finished(engine, reqs)
@@ -192,6 +220,7 @@ def main() -> None:
     n_ok = sum(f.status == STATUS_OK for f in results.values())
     print(f"{len(reqs)} requests ({n_ok} ok), {args.gen_len} tokens each, "
           f"{dt:.2f}s wall")
+    _write_telemetry(engine, args)
 
 
 if __name__ == "__main__":

@@ -38,3 +38,20 @@ from repro.serve.slo import (  # noqa: F401
     STATUSES,
 )
 from repro.serve.slots import SlotPool  # noqa: F401
+from repro.serve.telemetry import (  # noqa: F401
+    FlightRecorder,
+    Histogram,
+    MetricsRegistry,
+    TickRecord,
+    parse_prometheus_text,
+    quantile,
+    summarize,
+)
+from repro.serve.tracing import (  # noqa: F401
+    PID_REQUESTS,
+    PID_SCHEDULER,
+    PID_SLOTS,
+    SpanTracer,
+    request_spans,
+    validate_trace,
+)

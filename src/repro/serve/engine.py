@@ -48,6 +48,8 @@ from repro.models import model as MD
 from repro.serve import kv_cache as KC
 from repro.serve import prefix_cache as PXC
 from repro.serve import slo as SLO
+from repro.serve import telemetry as TM
+from repro.serve import tracing as TR
 
 
 # ---------------------------------------------------------------------------
@@ -403,6 +405,7 @@ class ChunkedPrefill:
                      if pf.routing is not None else None)
         self.pattern = eng._pattern(decisions, self.override)
         self.p_fa = None if pf.p_fa is None else np.asarray(pf.p_fa)
+        eng._record_routing(self.pattern, self.p_fa, self.sa_level)
         # geometry from abstract shapes only — the real buffers are
         # built inside the seed jit (no eager per-admission allocs)
         spec = jax.eval_shape(lambda: KC.init_decode_caches(
@@ -460,7 +463,9 @@ class ServeEngine:
                  routing_pooling: str = "prefix",
                  prefix_cache_mb: Optional[float] = None,
                  prefix_cache_host_mb: float = 0.0,
-                 slo: Optional[SLO.SLOConfig] = None):
+                 slo: Optional[SLO.SLOConfig] = None,
+                 telemetry: bool = False,
+                 flight_recorder_ticks: int = 512):
         if routing_pooling not in ("prefix", "prefix_suffix"):
             raise ValueError(
                 f"routing_pooling={routing_pooling!r}: expected 'prefix' "
@@ -485,6 +490,23 @@ class ServeEngine:
         # argmax routing) unless a scheduler's LoadTracker turns it.
         self.slo = slo if slo is not None else SLO.SLOConfig()
         self.sa_level = 0
+        # serving telemetry (DESIGN.md §Observability): a metrics
+        # registry, a request-span tracer and a per-tick flight
+        # recorder — all host-side.  Disabled (None) by default: the
+        # instrumented paths reduce to ``is not None`` checks, so the
+        # off state is bitwise- and executable-guard-identical to an
+        # uninstrumented engine (asserted in tests/test_telemetry.py).
+        if telemetry:
+            self.telemetry: Optional[TM.MetricsRegistry] = \
+                TM.MetricsRegistry()
+            self.tracer: Optional[TR.SpanTracer] = TR.SpanTracer()
+            self.flight_recorder: Optional[TM.FlightRecorder] = \
+                TM.FlightRecorder(flight_recorder_ticks)
+            self._register_core_metrics()
+        else:
+            self.telemetry = None
+            self.tracer = None
+            self.flight_recorder = None
         self._scheduler = None  # lazy ContinuousScheduler (submit/step)
         # optional decode-attention backend (e.g. the Pallas flash-decode
         # kernel via kernels.decode_attention.make_kernel_decode_attn);
@@ -629,6 +651,121 @@ class ServeEngine:
         lv = self.sa_level if level is None else level
         return RT.sa_biased_threshold(lv, step=self.slo.sa_threshold_step,
                                       max_level=self.slo.sa_level_max)
+
+    # -- telemetry (DESIGN.md §Observability) -------------------------------
+    def _register_core_metrics(self) -> None:
+        """Pre-register the always-present metrics so ``metrics_text``
+        exposes a stable schema from the first scrape (gauges read 0
+        until the scheduler ticks), and hook the prefix store's
+        eviction events into the registry."""
+        reg = self.telemetry
+        reg.gauge("flux_sa_level",
+                  "load-adaptive sparsity rung (0 = neutral routing)")
+        reg.gauge("flux_load_pressure",
+                  "LoadTracker queue-pressure signal in [0, 1]")
+        reg.gauge("serve_queue_depth", "waiting requests after admission")
+        reg.gauge("serve_slots_active", "resident decode slots, all pools")
+        reg.gauge("serve_slots_capacity", "total decode slots, all pools")
+        reg.counter("serve_ticks_total", "scheduler ticks")
+        reg.counter("serve_tokens_generated_total",
+                    "tokens accepted from decode chunks")
+        reg.counter("serve_requests_submitted_total", "requests submitted")
+        reg.counter("serve_prefill_chunks_total",
+                    "prefill chunks streamed as tick work")
+        reg.counter("serve_preemptions_total", "recompute preemptions")
+        reg.counter("serve_dispatches_total", "compiled calls issued")
+        reg.counter("flux_sa_transitions_total",
+                    "sparsity-dial rung changes, either direction")
+        reg.gauge("prefix_store_device_bytes",
+                  "prefix snapshot store occupancy, device tier")
+        reg.gauge("prefix_store_host_bytes",
+                  "prefix snapshot store occupancy, host tier")
+        for status in SLO.STATUSES:
+            reg.counter("serve_requests_finished_total",
+                        "retired requests by terminal status",
+                        status=status)
+        # per-layer FA/SA decision counters exist from the first scrape
+        # so dashboards see every routed layer, not just the ones the
+        # traffic so far happened to exercise
+        for i in self.cfg.routable_layers():
+            for d in ("fa", "sa"):
+                reg.counter("flux_router_decisions_total",
+                            "hard routing decisions at admission time",
+                            layer=str(i), decision=d)
+        if self.prefix_store is not None:
+            self.prefix_store.on_event = self._prefix_store_event
+
+    def _prefix_store_event(self, event: str) -> None:
+        self.telemetry.counter("prefix_store_events_total",
+                               "prefix store lifecycle events",
+                               event=event).inc()
+
+    def _record_routing(self, pattern, p_fa: Optional[np.ndarray],
+                        sa_level: int) -> None:
+        """Count per-layer FA/SA decisions and threshold-vs-score
+        margins for one admission.  Called where the routing decision
+        lands on host anyway (``np.asarray(pf.routing)`` in the
+        admission paths), so this reads already-materialized host state
+        and never adds a device sync."""
+        reg = self.telemetry
+        if reg is None or pattern is None:
+            return
+        routed = self.cfg.routable_layers()
+        for j, i in enumerate(routed):
+            d = pattern[i]
+            if d not in ("fa", "sa"):
+                continue  # duo head-splits have no binary decision
+            reg.counter("flux_router_decisions_total",
+                        layer=str(i), decision=d).inc()
+            if p_fa is not None and j < len(p_fa):
+                reg.histogram(
+                    "flux_router_margin",
+                    "router p_fa minus the (possibly SA-biased) decision "
+                    "threshold; positive = FA side",
+                    layer=str(i)).observe(RT.decision_margin(
+                        float(p_fa[j]), sa_level,
+                        step=self.slo.sa_threshold_step,
+                        max_level=self.slo.sa_level_max))
+
+    def _refresh_gauges(self) -> None:
+        """Point-in-time gauges from host state (scheduler occupancy,
+        prefix store tiers, sparsity dial) — called per scheduler tick
+        and at scrape time so ``metrics_text`` is current even between
+        ticks."""
+        reg = self.telemetry
+        reg.gauge("flux_sa_level").set(self.sa_level)
+        if self.prefix_store is not None:
+            reg.gauge("prefix_store_device_bytes").set(
+                self.prefix_store.device_bytes)
+            reg.gauge("prefix_store_host_bytes").set(
+                self.prefix_store.host_bytes)
+        sched = self._scheduler
+        if sched is not None:
+            reg.gauge("flux_load_pressure").set(sched.load.pressure)
+            reg.gauge("serve_queue_depth").set(len(sched.waiting))
+            reg.gauge("serve_slots_active").set(sched.n_active())
+            reg.gauge("serve_slots_capacity").set(
+                sum(p.capacity for p in sched.pools.values()))
+
+    def metrics_text(self) -> str:
+        """Current metrics as Prometheus text exposition format."""
+        if self.telemetry is None:
+            raise ValueError(
+                "metrics_text: telemetry is disabled — construct the "
+                "ServeEngine with telemetry=True (or pass --metrics-out "
+                "to launch/serve.py)")
+        self._refresh_gauges()
+        return self.telemetry.render()
+
+    def export_trace(self, path: str) -> None:
+        """Write the request-span trace as Chrome-trace/Perfetto JSON
+        (open in chrome://tracing or https://ui.perfetto.dev)."""
+        if self.tracer is None:
+            raise ValueError(
+                "export_trace: telemetry is disabled — construct the "
+                "ServeEngine with telemetry=True (or pass --trace-out "
+                "to launch/serve.py)")
+        self.tracer.export(path)
 
     # -- jit-cache bookkeeping ---------------------------------------------
     def decode_cache_size(self) -> int:
@@ -784,6 +921,8 @@ class ServeEngine:
             node = None  # routing not prefix-determined for this pair
         if node is None:
             store.misses += 1
+            if self.telemetry is not None:
+                self._prefix_store_event("miss")
             return
         store.acquire(node)  # pin against eviction while restoring
         try:
@@ -793,6 +932,8 @@ class ServeEngine:
             store.release(node)
         store.hits += 1
         store.hit_tokens += snap.boundary
+        if self.telemetry is not None:
+            self._prefix_store_event("hit")
         job.pattern = snap.pattern
         job.p_fa = None if snap.p_fa is None else np.array(snap.p_fa)
         job._geom = KC.cache_geometry(job.caches)
@@ -910,6 +1051,11 @@ class ServeEngine:
         decisions = (np.asarray(pf.routing)
                      if pf.routing is not None else None)
         pattern = self._pattern(decisions, override)
+        if self.telemetry is not None:
+            self._record_routing(
+                pattern,
+                None if pf.p_fa is None else np.asarray(pf.p_fa),
+                self.sa_level)
         seq_len = tokens.shape[1] + (prefix_embeddings.shape[1]
                                      if prefix_embeddings is not None else 0)
         if seq_len > self.max_len:

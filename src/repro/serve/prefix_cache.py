@@ -160,6 +160,12 @@ class PrefixStore:
         self.chunk = int(chunk)
         self.budget_bytes = int(budget_bytes)
         self.host_budget_bytes = int(host_budget_bytes)
+        # optional telemetry hook (DESIGN.md §Observability): called
+        # with an event name ("insert"/"demotion"/"drop"/"promotion";
+        # the engine adds "hit"/"miss" where it counts them) so a
+        # metrics registry can observe store churn without the store
+        # importing telemetry.  None = no-op.
+        self.on_event: Optional[Any] = None
         self._roots: Dict[Tuple, _Node] = {}
         # LRU over snapshot-bearing nodes (both tiers), least recent first
         self._lru: "OrderedDict[int, _Node]" = OrderedDict()
@@ -264,6 +270,8 @@ class PrefixStore:
         node.on_host = False
         self.device_bytes += snap.nbytes
         self.inserts += 1
+        if self.on_event is not None:
+            self.on_event("insert")
         self._lru[id(node)] = node
         self._touch(node)
         self.enforce_budget()
@@ -300,6 +308,8 @@ class PrefixStore:
         self.device_bytes -= snap.nbytes
         self.host_bytes += snap.nbytes
         self.demotions += 1
+        if self.on_event is not None:
+            self.on_event("demotion")
 
     def _drop(self, node: _Node) -> None:
         nbytes = node.snap.nbytes
@@ -311,6 +321,8 @@ class PrefixStore:
         node.on_host = False
         self._lru.pop(id(node), None)
         self.drops += 1
+        if self.on_event is not None:
+            self.on_event("drop")
         # prune structural leaves so dropped paths don't accumulate
         while (node.parent is not None and not node.children
                and node.snap is None and node.refs == 0):
@@ -350,6 +362,8 @@ class PrefixStore:
         node.on_host = False
         self.host_bytes -= snap.nbytes
         self.device_bytes += snap.nbytes
+        if self.on_event is not None:
+            self.on_event("promotion")
         self._touch(node)
         self.enforce_budget()
 

@@ -59,6 +59,8 @@ import numpy as np
 
 from repro.serve import kv_cache as KC
 from repro.serve import slo as SLO
+from repro.serve import telemetry as TM
+from repro.serve import tracing as TR
 from repro.serve.engine import (KVStats, _trim_eos, decode_executable_key,
                                 kv_cache_stats)
 from repro.serve.slots import SlotPool
@@ -213,6 +215,13 @@ class ContinuousScheduler:
         self.ticks = 0
         self.tokens_generated = 0
         self.prefill_chunk_ticks = 0  # prefill chunks streamed, lifetime
+        # telemetry bookkeeping (engine.telemetry is None ⇒ never read):
+        # non-ok lifecycle events since the last tick, a stable small-int
+        # id per geometry bucket for trace/recorder labels, and the
+        # LoadTracker.transitions watermark for the delta counter
+        self._tm_events: List[str] = []
+        self._tm_pool_ids: Dict[Tuple, int] = {}
+        self._tm_transitions = 0
 
     # -- submission --------------------------------------------------------
     def submit(self, req) -> int:
@@ -255,6 +264,17 @@ class ContinuousScheduler:
         inf = _InFlight(req=req, metrics=RequestMetrics(
             prompt_len=len(req.tokens), arrival_t=now),
             deadline_t=(now + deadline) if deadline is not None else None)
+        eng = self.engine
+        if eng.telemetry is not None:
+            eng.telemetry.counter("serve_requests_submitted_total").inc()
+        if eng.tracer is not None:
+            eng.tracer.name_thread(TR.PID_REQUESTS, req.rid,
+                                   f"req{req.rid}", sort_index=req.rid)
+            eng.tracer.instant(
+                "submit", TR.PID_REQUESTS, req.rid, now,
+                args={"prompt_len": len(req.tokens),
+                      "n_steps": req.n_steps,
+                      "priority": getattr(req, "priority", 0)})
         if (self.slo.max_queue is not None
                 and len(self.waiting) >= self.slo.max_queue):
             victim = self._shed_victim(inf)
@@ -298,7 +318,55 @@ class ContinuousScheduler:
                             routing=inf.pattern, metrics=m, status=status)
         self.finished.append(f)
         self._announce.append(f)
+        if self.engine.telemetry is not None:
+            self._tm_retire(f, now)
         return f
+
+    def _tm_retire(self, f: FinishedRequest, now: float) -> None:
+        """Telemetry for one terminal transition: status counter,
+        latency histograms, and the request's lifetime span with its
+        queue/prefill/decode phase sub-spans (all from RequestMetrics
+        timestamps already taken — no extra clock reads)."""
+        eng = self.engine
+        m = f.metrics
+        if f.status != SLO.STATUS_OK:
+            self._tm_events.append(f"{f.status}:{f.rid}")
+        reg = eng.telemetry
+        reg.counter("serve_requests_finished_total", status=f.status).inc()
+        if m.first_token_t is not None:
+            reg.histogram("serve_ttft_seconds",
+                          "time to first token, from arrival"
+                          ).observe(m.ttft)
+        if m.admitted_t is not None:
+            reg.histogram("serve_queue_delay_seconds",
+                          "arrival to (final) admission"
+                          ).observe(m.queue_delay)
+        if m.prefill_time > 0:
+            reg.histogram("serve_prefill_seconds",
+                          "wall clock streaming the landed admission's "
+                          "prefill chunks").observe(m.prefill_time)
+        tracer = eng.tracer
+        if tracer is None:
+            return
+        rid = f.rid
+        tracer.name_thread(TR.PID_REQUESTS, rid, f"req{rid}",
+                           sort_index=rid)
+        tracer.complete(
+            f"req{rid}", TR.PID_REQUESTS, rid, m.arrival_t, now,
+            args={"status": f.status, "prompt_len": m.prompt_len,
+                  "n_generated": m.n_generated,
+                  "preemptions": m.preemptions,
+                  "prefix_hit_tokens": m.prefix_hit_tokens})
+        if m.admitted_t is not None:
+            tracer.complete("queue", TR.PID_REQUESTS, rid,
+                            m.arrival_t, m.admitted_t, cat="phase")
+            tracer.complete("decode", TR.PID_REQUESTS, rid,
+                            m.admitted_t, now, cat="phase")
+        if m.prefill_start_t is not None and m.prefill_done_t is not None:
+            tracer.complete("prefill", TR.PID_REQUESTS, rid,
+                            m.prefill_start_t, m.prefill_done_t,
+                            cat="phase")
+        tracer.instant(f"retire:{f.status}", TR.PID_REQUESTS, rid, now)
 
     def cancel(self, rid: int) -> bool:
         """Cooperative cancellation: retire ``rid`` with status
@@ -417,9 +485,16 @@ class ContinuousScheduler:
                     inf.job.prefix_hit_tokens, inf.metrics.prompt_len)
                 inf.metrics.prefill_start_t = self.clock()
             while budget > 0 and not inf.job.done:
+                t0 = self.clock() if eng.tracer is not None else 0.0
                 inf.job.step()
                 self.prefill_chunk_ticks += 1
                 budget -= 1
+                if eng.telemetry is not None:
+                    eng.telemetry.counter("serve_prefill_chunks_total").inc()
+                if eng.tracer is not None:
+                    eng.tracer.complete(
+                        "prefill_chunk", TR.PID_REQUESTS, inf.req.rid,
+                        t0, self.clock(), cat="phase")
             if inf.job.done and inf.metrics.prefill_done_t is None:
                 inf.metrics.prefill_done_t = self.clock()
 
@@ -509,6 +584,14 @@ class ContinuousScheduler:
         victim.metrics.prefill_done_t = None
         victim.metrics.prefix_hit_tokens = 0
         self.waiting.append(victim)
+        eng = self.engine
+        if eng.telemetry is not None:
+            eng.telemetry.counter("serve_preemptions_total").inc()
+            self._tm_events.append(f"preempt:{victim.req.rid}")
+        if eng.tracer is not None:
+            eng.tracer.instant("preempt", TR.PID_REQUESTS,
+                               victim.req.rid, self.clock(),
+                               args={"by_priority": priority})
         return slot
 
     # -- one scheduling tick -----------------------------------------------
@@ -521,6 +604,12 @@ class ContinuousScheduler:
         eng = self.engine
         self.ticks += 1
         now = self.clock()
+        tm_on = eng.telemetry is not None
+        if tm_on:
+            # deltas for this tick's flight record / counters; taking
+            # them costs three attribute reads — nothing touches jax
+            tm_t0, tm_d0 = now, eng.dispatch_count
+            tm_p0, tm_tok0 = self.prefill_chunk_ticks, self.tokens_generated
         self._expire(now)
         if self.slo.adaptive_sparsity:
             cap = sum(p.capacity for p in self.pools.values())
@@ -542,6 +631,7 @@ class ContinuousScheduler:
         for key, pool in self.pools.items():
             if not pool.active:
                 continue
+            t_decode = self.clock() if tm_on else 0.0
             eng._decode_keys.add(decode_executable_key(
                 pool.caches, pool.pos, self.chunk, True, None, None,
                 self._rng))
@@ -561,6 +651,22 @@ class ContinuousScheduler:
             # so their streams are bitwise those of an unfaulted run.
             finite = np.asarray(jnp.all(jnp.isfinite(pool.logits), axis=-1))
             now = self.clock()
+            if eng.tracer is not None:
+                # residency spans for the slots this chunk decoded; the
+                # timestamp pair brackets dispatch→host-sync, taken
+                # around the np.asarray(toks) sync that happens anyway
+                pi = self._tm_pool_ids.setdefault(
+                    key, len(self._tm_pool_ids))
+                for slot, res in pool.active.items():
+                    tid = pi * 1000 + slot
+                    eng.tracer.name_thread(TR.PID_SLOTS, tid,
+                                           f"g{pi}/slot{slot}",
+                                           sort_index=tid)
+                    eng.tracer.complete(f"rid{res.req.rid}", TR.PID_SLOTS,
+                                        tid, t_decode, now, cat="slot")
+                eng.tracer.complete(
+                    f"decode g{pi}", TR.PID_SCHEDULER, 1, t_decode, now,
+                    args={"batch": len(pool.active), "chunk": self.chunk})
             for slot in sorted(pool.active):
                 inf = pool.active[slot]
                 if not finite[slot]:
@@ -580,8 +686,65 @@ class ContinuousScheduler:
                     self._retire(inf, SLO.STATUS_OK, now,
                                  pool=pool, slot=slot)
         eng._check_executable_guard()
+        if tm_on:
+            self._tm_tick(t0=tm_t0, d0=tm_d0, p0=tm_p0, tok0=tm_tok0)
         done, self._announce = self._announce, []
         return done
+
+    def _tm_tick(self, t0: float, d0: int, p0: int, tok0: int) -> None:
+        """End-of-tick telemetry: delta counters, gauge refresh, the
+        scheduler-track tick span + counter samples, and this tick's
+        flight-recorder record.  Everything read here is host state the
+        tick already materialized."""
+        eng = self.engine
+        now = self.clock()
+        reg = eng.telemetry
+        cap = sum(p.capacity for p in self.pools.values())
+        reg.counter("serve_ticks_total").inc()
+        reg.counter("serve_tokens_generated_total").inc(
+            self.tokens_generated - tok0)
+        reg.counter("serve_dispatches_total").inc(eng.dispatch_count - d0)
+        reg.counter("flux_sa_transitions_total",
+                    "sparsity-dial rung changes, either direction").inc(
+            self.load.transitions - self._tm_transitions)
+        self._tm_transitions = self.load.transitions
+        eng._refresh_gauges()
+        tracer = eng.tracer
+        if tracer is not None:
+            tracer.name_thread(TR.PID_SCHEDULER, 0, "ticks", sort_index=0)
+            tracer.name_thread(TR.PID_SCHEDULER, 1, "decode", sort_index=1)
+            tracer.complete(
+                "tick", TR.PID_SCHEDULER, 0, t0, now,
+                args={"tick": self.ticks,
+                      "prefill_chunks": self.prefill_chunk_ticks - p0,
+                      "dispatches": eng.dispatch_count - d0})
+            tracer.counter("queue_depth", now,
+                           {"waiting": len(self.waiting)})
+            tracer.counter("slots", now,
+                           {"active": self.n_active(), "capacity": cap})
+            tracer.counter("sparsity", now,
+                           {"sa_level": eng.sa_level,
+                            "pressure": self.load.pressure})
+        fr = eng.flight_recorder
+        if fr is not None:
+            batch = {
+                f"g{self._tm_pool_ids.setdefault(k, len(self._tm_pool_ids))}":
+                p.occupancy() for k, p in self.pools.items()}
+            store = eng.prefix_store
+            fr.record(TM.TickRecord(
+                tick=self.ticks, t=now,
+                queue_depth=len(self.waiting),
+                n_active=self.n_active(), capacity=cap,
+                batch_by_geometry=batch,
+                prefill_chunks=self.prefill_chunk_ticks - p0,
+                dispatch_delta=eng.dispatch_count - d0,
+                sa_level=eng.sa_level, pressure=self.load.pressure,
+                prefix_device_bytes=(store.device_bytes
+                                     if store is not None else 0),
+                prefix_host_bytes=(store.host_bytes
+                                   if store is not None else 0),
+                events=tuple(self._tm_events)))
+        self._tm_events = []
 
     def drain(self) -> Dict[int, FinishedRequest]:
         """Tick until every submitted request has retired (finished,

@@ -165,6 +165,10 @@ class LoadTracker:
         self.slo = slo
         self.level = 0
         self.pressure = 0.0
+        # lifetime rung changes, either direction — a dial that flaps is
+        # a tuning smell, and this is the cheapest signal of it (the
+        # telemetry registry exposes it as flux_sa_transitions_total)
+        self.transitions = 0
         self._hot = 0
         self._cold = 0
 
@@ -177,11 +181,13 @@ class LoadTracker:
             if (self._hot >= slo.pressure_patience
                     and self.level < slo.sa_level_max):
                 self.level += 1
+                self.transitions += 1
                 self._hot = 0
         elif self.pressure <= slo.pressure_low:
             self._cold, self._hot = self._cold + 1, 0
             if self._cold >= slo.pressure_patience and self.level > 0:
                 self.level -= 1
+                self.transitions += 1
                 self._cold = 0
         else:
             self._hot = self._cold = 0

@@ -70,6 +70,10 @@ class SlotPool:
     def geometry(self) -> Tuple:
         return KC.cache_geometry(self.caches)
 
+    def occupancy(self) -> int:
+        """Resident slots — the per-pool batch size telemetry records."""
+        return len(self.active)
+
     def slot_geometry(self) -> Tuple:
         return KC.slot_geometry(self.caches)
 

@@ -1,0 +1,406 @@
+"""Serving metrics registry + tick flight recorder (DESIGN.md
+§Observability).
+
+Two host-side telemetry primitives for the serving stack:
+
+  MetricsRegistry — counters, gauges and histograms (with bounded
+      quantile digests) keyed by (name, labels), rendered as Prometheus
+      text exposition format (``ServeEngine.metrics_text()``,
+      ``launch/serve.py --metrics-out``).  Histograms render as
+      Prometheus *summaries*: ``name{quantile="0.5"} …`` plus
+      ``name_sum`` / ``name_count``.
+  FlightRecorder — a bounded ring of per-tick :class:`TickRecord`
+      snapshots (batch size per geometry, prefill chunks, dispatch
+      delta, occupancy, queue depth, load pressure, sa_level, prefix
+      tier bytes, shed/quarantine events).  After an incident,
+      ``engine.flight_recorder.dump()`` returns the last N ticks as
+      plain dicts — the serving equivalent of a black box.
+
+Design rules (enforced by tests/test_telemetry.py):
+
+  * Host-side only.  Nothing in this module touches jax: no traced
+    values, no jit, no device transfers.  Every recorded quantity is
+    already-materialized host state (Python ints/floats the scheduler
+    maintains anyway), so telemetry can never add a device sync or a
+    compiled executable to the tick loop.
+  * Allocation-light.  Histograms keep a bounded reservoir (decimated
+    in place when full), the flight recorder is a ``deque(maxlen=…)``,
+    and metric objects are created once and mutated in place.
+  * Off is free.  The scheduler/engine hold ``None`` instead of these
+    objects when telemetry is disabled; the instrumented paths reduce
+    to a single ``is not None`` test, keeping the telemetry-off run
+    bitwise-identical (and executable-guard-identical) to the
+    uninstrumented scheduler.
+
+``python -m repro.serve.telemetry metrics.prom`` validates a scraped
+exposition file (used by the CI telemetry smoke).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import OrderedDict, deque
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Quantile digest helpers (shared with benchmarks/common.py)
+# ---------------------------------------------------------------------------
+
+
+def quantile(xs: Iterable[float], q: float) -> float:
+    """The q-th percentile (0..100) of the finite values in ``xs``;
+    NaN when none are finite.  Linear interpolation between order
+    statistics — the same estimator ``np.percentile`` defaults to, in
+    pure Python so the registry never imports numpy on the hot path."""
+    vals = sorted(x for x in xs if math.isfinite(x))
+    if not vals:
+        return float("nan")
+    if len(vals) == 1:
+        return float(vals[0])
+    pos = (q / 100.0) * (len(vals) - 1)
+    lo = max(0, min(int(math.floor(pos)), len(vals) - 1))
+    hi = max(0, min(lo + 1, len(vals) - 1))
+    frac = pos - lo
+    return float(vals[lo] * (1.0 - frac) + vals[hi] * frac)
+
+
+def summarize(xs: Iterable[float],
+              qs: Sequence[float] = (50, 95, 99)) -> Dict[str, float]:
+    """{"p50": …, "p95": …, "p99": …} digest of ``xs`` (NaN-filtered).
+    The one percentile helper serving benches share (benchmarks/common
+    re-exports it) instead of per-file copies."""
+    vals = [x for x in xs if math.isfinite(x)]
+    return {f"p{q:g}": quantile(vals, q) for q in qs}
+
+
+# ---------------------------------------------------------------------------
+# Metric primitives
+# ---------------------------------------------------------------------------
+
+
+class Counter:
+    """Monotonically increasing count."""
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError(f"Counter.inc({n}): counters only go up — "
+                             f"use a Gauge for values that can fall")
+        self.value += n
+
+
+class Gauge:
+    """Point-in-time value (set, not accumulated)."""
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Streaming distribution with a bounded reservoir.
+
+    Keeps exact ``count``/``sum``/``min``/``max`` plus a reservoir of at
+    most ``reservoir`` observations for quantiles.  When the reservoir
+    fills, it is decimated in place (every 2nd sample kept) and the
+    acceptance stride doubles — deterministic, allocation-bounded, and
+    faithful enough for p50/p95/p99 serving digests."""
+    __slots__ = ("count", "sum", "min", "max", "_res", "_cap", "_stride",
+                 "_seen")
+
+    def __init__(self, reservoir: int = 1024):
+        if reservoir < 2:
+            raise ValueError(f"Histogram: reservoir={reservoir} must be "
+                             f">= 2 to hold a distribution")
+        self.count = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+        self._res: List[float] = []
+        self._cap = int(reservoir)
+        self._stride = 1
+        self._seen = 0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        if not math.isfinite(v):
+            return  # NaN TTFTs (never-served requests) are not latencies
+        self.count += 1
+        self.sum += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+        self._seen += 1
+        if self._seen % self._stride:
+            return
+        if len(self._res) >= self._cap:
+            del self._res[::2]
+            self._stride *= 2
+            if self._seen % self._stride:
+                return
+        self._res.append(v)
+
+    def percentile(self, q: float) -> float:
+        return quantile(self._res, q)
+
+    def digest(self, qs: Sequence[float] = (50, 95, 99)) -> Dict[str, float]:
+        return {f"p{q:g}": self.percentile(q) for q in qs}
+
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", r"\\").replace('"', r'\"').replace("\n", r"\n")
+
+
+def _fmt(v: float) -> str:
+    if math.isnan(v):
+        return "NaN"
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    return repr(float(v))
+
+
+class MetricsRegistry:
+    """Named metric store with Prometheus text rendering.
+
+    ``counter``/``gauge``/``histogram`` get-or-create the metric for a
+    (name, labels) pair, so call sites just
+    ``reg.counter("requests_total", status="ok").inc()``; creation cost
+    is paid once and steady-state updates are a dict hit plus a float
+    add."""
+
+    def __init__(self):
+        # name -> (kind, help); (name, labels) -> metric object
+        self._meta: "OrderedDict[str, Tuple[str, str]]" = OrderedDict()
+        self._metrics: Dict[Tuple[str, Tuple[Tuple[str, str], ...]],
+                            object] = {}
+
+    # -- registration --------------------------------------------------------
+    def _get(self, kind: str, name: str, help_: str, labels: Dict[str, str],
+             factory):
+        if name not in self._meta:
+            if not _NAME_RE.match(name):
+                raise ValueError(
+                    f"metric name {name!r} is not a valid Prometheus "
+                    f"metric name ([a-zA-Z_:][a-zA-Z0-9_:]*)")
+            for k in labels:
+                if not _LABEL_RE.match(k):
+                    raise ValueError(
+                        f"label name {k!r} on metric {name!r} is not a "
+                        f"valid Prometheus label name")
+            self._meta[name] = (kind, help_)
+        elif self._meta[name][0] != kind:
+            raise ValueError(
+                f"metric {name!r} already registered as "
+                f"{self._meta[name][0]}, cannot re-register as {kind}")
+        key = (name, tuple(sorted((k, str(v)) for k, v in labels.items())))
+        m = self._metrics.get(key)
+        if m is None:
+            m = self._metrics[key] = factory()
+        return m
+
+    def counter(self, name: str, help: str = "", **labels) -> Counter:
+        return self._get("counter", name, help, labels, Counter)
+
+    def gauge(self, name: str, help: str = "", **labels) -> Gauge:
+        return self._get("gauge", name, help, labels, Gauge)
+
+    def histogram(self, name: str, help: str = "", reservoir: int = 1024,
+                  **labels) -> Histogram:
+        return self._get("summary", name, help, labels,
+                         lambda: Histogram(reservoir))
+
+    # -- rendering -----------------------------------------------------------
+    @staticmethod
+    def _labels_str(labels: Tuple[Tuple[str, str], ...],
+                    extra: Tuple[Tuple[str, str], ...] = ()) -> str:
+        items = labels + extra
+        if not items:
+            return ""
+        return ("{" + ",".join(f'{k}="{_escape(v)}"' for k, v in items)
+                + "}")
+
+    def render(self) -> str:
+        """Prometheus text exposition format (version 0.0.4)."""
+        out: List[str] = []
+        for name, (kind, help_) in self._meta.items():
+            if help_:
+                out.append(f"# HELP {name} {help_}")
+            out.append(f"# TYPE {name} {kind}")
+            for (mname, labels), m in self._metrics.items():
+                if mname != name:
+                    continue
+                if kind in ("counter", "gauge"):
+                    out.append(f"{name}{self._labels_str(labels)} "
+                               f"{_fmt(m.value)}")
+                    continue
+                for q in (0.5, 0.95, 0.99):
+                    out.append(
+                        f"{name}"
+                        f"{self._labels_str(labels, (('quantile', f'{q:g}'),))}"
+                        f" {_fmt(m.percentile(q * 100))}")
+                out.append(f"{name}_sum{self._labels_str(labels)} "
+                           f"{_fmt(m.sum)}")
+                out.append(f"{name}_count{self._labels_str(labels)} "
+                           f"{_fmt(float(m.count))}")
+        return "\n".join(out) + "\n"
+
+
+# -- exposition-format validation (tests + CI smoke) -------------------------
+
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r"\s+(?P<value>[+-]?(?:\d+\.?\d*(?:[eE][+-]?\d+)?|Inf|NaN))"
+    r"(?:\s+\d+)?$")
+_LABEL_PAIR_RE = re.compile(
+    r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def parse_prometheus_text(text: str) -> Dict[str, List[Tuple[Dict[str, str],
+                                                             float]]]:
+    """Parse (and thereby validate) Prometheus text exposition.
+
+    Returns {metric_name: [(labels, value), …]}.  Raises ``ValueError``
+    on any malformed line — the CI telemetry smoke and the tests call
+    this on ``ServeEngine.metrics_text()`` output so a rendering
+    regression fails loudly instead of producing an unscrapeable
+    endpoint."""
+    samples: Dict[str, List[Tuple[Dict[str, str], float]]] = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("#"):
+            parts = line.split(None, 3)
+            if len(parts) < 3 or parts[1] not in ("HELP", "TYPE"):
+                raise ValueError(
+                    f"line {lineno}: malformed comment {line!r} — only "
+                    f"'# HELP <name> …' and '# TYPE <name> <kind>' are "
+                    f"valid exposition comments")
+            if (parts[1] == "TYPE"
+                    and parts[3].split()[0] not in (
+                        "counter", "gauge", "histogram", "summary",
+                        "untyped")):
+                raise ValueError(
+                    f"line {lineno}: unknown metric type in {line!r}")
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(
+                f"line {lineno}: {line!r} is not a valid Prometheus "
+                f"sample line")
+        labels: Dict[str, str] = {}
+        if m.group("labels"):
+            body = m.group("labels")
+            consumed = 0
+            for pm in _LABEL_PAIR_RE.finditer(body):
+                labels[pm.group(1)] = pm.group(2)
+                consumed = pm.end()
+            rest = body[consumed:].strip().strip(",")
+            if rest:
+                raise ValueError(
+                    f"line {lineno}: malformed label body {body!r}")
+        v = m.group("value")
+        val = float("nan") if v == "NaN" else float(v.replace("Inf", "inf"))
+        samples.setdefault(m.group("name"), []).append((labels, val))
+    if not samples:
+        raise ValueError("no metric samples found in exposition text")
+    return samples
+
+
+# ---------------------------------------------------------------------------
+# Tick flight recorder
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TickRecord:
+    """One scheduler tick, as the flight recorder remembers it.  Every
+    field is host state the scheduler already maintains — recording one
+    is a dataclass allocation plus dict copies, never a device read."""
+    tick: int                       # scheduler tick counter
+    t: float                        # tick timestamp (scheduler clock)
+    queue_depth: int                # waiting requests after admission
+    n_active: int                   # resident decode slots, all pools
+    capacity: int                   # total decode slots, all pools
+    batch_by_geometry: Dict[str, int]  # active slots per geometry bucket
+    prefill_chunks: int             # prefill chunks streamed this tick
+    dispatch_delta: int             # compiled calls issued this tick
+    sa_level: int                   # sparsity rung after this tick
+    pressure: float                 # LoadTracker queue-pressure signal
+    prefix_device_bytes: int = 0    # prefix store occupancy, device tier
+    prefix_host_bytes: int = 0      # prefix store occupancy, host tier
+    events: Tuple[str, ...] = ()    # non-ok retirements: "status:rid"
+
+    def as_dict(self) -> Dict[str, object]:
+        d = self.__dict__.copy()
+        d["batch_by_geometry"] = dict(self.batch_by_geometry)
+        d["events"] = list(self.events)
+        return d
+
+
+class FlightRecorder:
+    """Bounded ring of :class:`TickRecord` — the last ``capacity``
+    scheduler ticks, oldest evicted first."""
+
+    def __init__(self, capacity: int = 512):
+        if capacity < 1:
+            raise ValueError(
+                f"FlightRecorder: capacity={capacity} must be >= 1 tick")
+        self.capacity = int(capacity)
+        self._ring: "deque[TickRecord]" = deque(maxlen=self.capacity)
+        self.recorded = 0  # lifetime ticks seen (>= len(ring))
+
+    def record(self, rec: TickRecord) -> None:
+        self._ring.append(rec)
+        self.recorded += 1
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def dump(self) -> List[Dict[str, object]]:
+        """The retained ticks, oldest first, as plain dicts (JSON-ready
+        incident payload)."""
+        return [r.as_dict() for r in self._ring]
+
+    def last(self) -> Optional[TickRecord]:
+        return self._ring[-1] if self._ring else None
+
+    def clear(self) -> None:
+        self._ring.clear()
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    """CLI validator: ``python -m repro.serve.telemetry metrics.prom``
+    parses an exposition file and reports the metric census (exit 1 on
+    malformed input) — the CI smoke's 'does the endpoint scrape' gate."""
+    import sys
+    args = sys.argv[1:] if argv is None else argv
+    if len(args) != 1:
+        print("usage: python -m repro.serve.telemetry <metrics.prom>",
+              file=sys.stderr)
+        return 2
+    with open(args[0]) as f:
+        text = f.read()
+    try:
+        samples = parse_prometheus_text(text)
+    except ValueError as e:
+        print(f"INVALID prometheus text: {e}", file=sys.stderr)
+        return 1
+    n = sum(len(v) for v in samples.values())
+    print(f"ok: {len(samples)} metrics, {n} samples")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,322 @@
+"""Serving telemetry (DESIGN.md §Observability).
+
+The load-bearing claims:
+  1. telemetry OFF is free: a mixed drain with telemetry disabled is
+     bitwise-identical (tokens), dispatch-identical and
+     executable-guard-identical to the uninstrumented scheduler;
+  2. telemetry ON is still host-side: it adds ZERO compiled
+     executables — every recorded quantity is already-materialized
+     host state, so no new jit keys and no device syncs in the tick
+     loop;
+  3. the exports are valid: the Perfetto trace round-trips through
+     ``json.loads`` + schema check with a submit→retire lifetime span
+     for every request in the drain, and ``metrics_text()`` parses as
+     Prometheus text exposition with the per-layer routing counts and
+     sa_level/pressure gauges present;
+  4. everything is bounded: the histogram reservoir, the span buffer
+     and the flight-recorder ring all respect their caps under churn.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.models import model as MD
+from repro.serve import (Request, SLOConfig, ServeEngine)
+from repro.serve import telemetry as TM
+from repro.serve import tracing as TR
+
+ARCHS = ["phi3-mini-3.8b", "jamba-1.5-large-398b"]
+
+
+def _setup(arch="phi3-mini-3.8b"):
+    cfg = smoke_variant(get_config(arch))
+    params = MD.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _prompt(cfg, n=20, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _drain(cfg, params, *, telemetry: bool, n=5, flight_ticks=512):
+    """A small mixed-length drain; returns (engine, scheduler, result)."""
+    eng = ServeEngine(params, cfg, max_len=64, telemetry=telemetry,
+                      flight_recorder_ticks=flight_ticks)
+    sched = eng.scheduler(slots_per_bucket=2, chunk=2,
+                          prefill_chunks_per_tick=4)
+    for i in range(n):
+        sched.submit(Request(rid=i, tokens=_prompt(cfg, 12 + 5 * i, seed=i),
+                             n_steps=6))
+    return eng, sched, sched.drain()
+
+
+# ---------------------------------------------------------------------------
+# Parity: off is bitwise/guard-identical, on adds zero executables
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_telemetry_off_on_parity_and_zero_new_executables(arch):
+    cfg, params = _setup(arch)
+    eng0, _, res0 = _drain(cfg, params, telemetry=False)
+    eng1, _, res1 = _drain(cfg, params, telemetry=True)
+    assert set(res0) == set(res1)
+    for rid in res0:
+        assert np.array_equal(res0[rid].tokens, res1[rid].tokens), rid
+        assert res0[rid].status == res1[rid].status
+    # same compiled-call count, same executable census: telemetry
+    # changed no jit key and forced no extra dispatch
+    assert eng0.dispatch_count == eng1.dispatch_count
+    assert eng0.decode_cache_size() == eng1.decode_cache_size()
+    assert (eng0.prefill_chunk_cache_size()
+            == eng1.prefill_chunk_cache_size())
+    assert eng0._decode_keys == eng1._decode_keys
+    # off engine holds no telemetry objects at all
+    assert eng0.telemetry is None and eng0.tracer is None
+    assert eng0.flight_recorder is None
+
+
+def test_telemetry_disabled_exports_raise():
+    cfg, params = _setup()
+    eng = ServeEngine(params, cfg, max_len=64)
+    with pytest.raises(ValueError, match="telemetry is disabled"):
+        eng.metrics_text()
+    with pytest.raises(ValueError, match="telemetry is disabled"):
+        eng.export_trace("/dev/null")
+
+
+# ---------------------------------------------------------------------------
+# Metrics: Prometheus text parses, required families present
+# ---------------------------------------------------------------------------
+
+def test_metrics_text_parses_with_routing_and_pressure_gauges():
+    cfg, params = _setup()
+    eng, sched, res = _drain(cfg, params, telemetry=True)
+    text = eng.metrics_text()
+    samples = TM.parse_prometheus_text(text)
+    for family in ("flux_router_decisions_total", "flux_sa_level",
+                   "flux_load_pressure", "serve_queue_depth",
+                   "serve_slots_active", "serve_requests_finished_total",
+                   "serve_ticks_total", "serve_ttft_seconds",
+                   "flux_sa_transitions_total"):
+        assert family in samples, family
+    # per-layer FA/SA decision counters exist for every routed layer
+    # and every decision, and the drained requests were all counted
+    decisions = samples["flux_router_decisions_total"]
+    layers = {lb["layer"] for lb, _ in decisions}
+    assert layers == {str(i) for i in cfg.routable_layers()}
+    assert {lb["decision"] for lb, _ in decisions} == {"fa", "sa"}
+    per_layer = {}
+    for lb, v in decisions:
+        per_layer[lb["layer"]] = per_layer.get(lb["layer"], 0) + v
+    # each admission lands at most one fa/sa decision per routed layer
+    # (duo head-splits have no binary decision and count nothing)
+    assert max(per_layer.values()) <= len(res)
+    assert sum(per_layer.values()) > 0
+    finished = {lb["status"]: v
+                for lb, v in samples["serve_requests_finished_total"]}
+    assert finished["ok"] == len(res)
+    # ttft summary rendered with quantiles + sum + count
+    assert "serve_ttft_seconds_count" in samples
+    assert any(lb.get("quantile") == "0.95"
+               for lb, _ in samples["serve_ttft_seconds"])
+
+
+def test_metrics_registry_render_and_parser_rejects_garbage():
+    reg = TM.MetricsRegistry()
+    reg.counter("a_total", "help", kind="x").inc(3)
+    reg.gauge("b").set(-1.5)
+    h = reg.histogram("lat_seconds", "latency")
+    for v in range(100):
+        h.observe(v / 100)
+    samples = TM.parse_prometheus_text(reg.render())
+    assert samples["a_total"][0] == ({"kind": "x"}, 3.0)
+    assert samples["b"][0][1] == -1.5
+    assert samples["lat_seconds_count"][0][1] == 100.0
+    with pytest.raises(ValueError):
+        TM.parse_prometheus_text("not a metric line at all!\n")
+    with pytest.raises(ValueError):
+        TM.parse_prometheus_text("# BOGUS comment kind\n")
+    with pytest.raises(ValueError):
+        TM.parse_prometheus_text("")
+    with pytest.raises(ValueError):
+        reg.counter("a_total").inc(-1)
+    with pytest.raises(ValueError):
+        reg.gauge("a_total")  # kind clash on re-registration
+    with pytest.raises(ValueError):
+        reg.counter("bad name")
+
+
+def test_histogram_reservoir_bounded_under_churn():
+    h = TM.Histogram(reservoir=64)
+    for v in range(10_000):
+        h.observe(float(v))
+    assert h.count == 10_000
+    assert h.sum == float(sum(range(10_000)))
+    assert h.min == 0.0 and h.max == 9999.0
+    assert len(h._res) <= 64  # bounded despite 10k observations
+    # decimated quantiles stay faithful to the uniform stream
+    assert abs(h.percentile(50) - 5000.0) < 1500.0
+    assert h.percentile(99) > h.percentile(50) > h.percentile(1)
+    h.observe(float("nan"))  # NaN is not a latency
+    assert h.count == 10_000
+
+
+def test_quantile_helper_matches_numpy():
+    xs = [3.0, 1.0, float("nan"), 2.0, 10.0]
+    finite = [x for x in xs if np.isfinite(x)]
+    for q in (0, 25, 50, 95, 100):
+        assert TM.quantile(xs, q) == pytest.approx(
+            float(np.percentile(finite, q)))
+    assert np.isnan(TM.quantile([], 50))
+    s = TM.summarize(xs)
+    assert set(s) == {"p50", "p95", "p99"}
+
+
+# ---------------------------------------------------------------------------
+# Trace: json round-trip, schema, full request coverage
+# ---------------------------------------------------------------------------
+
+def test_trace_roundtrip_schema_and_request_coverage(tmp_path):
+    cfg, params = _setup()
+    eng, sched, res = _drain(cfg, params, telemetry=True)
+    path = tmp_path / "trace.json"
+    eng.export_trace(str(path))
+    obj = json.loads(path.read_text())  # round-trips through json.loads
+    census = TR.validate_trace(obj)
+    assert census["X"] > 0 and census["M"] > 0
+    # every request in the drain has a submit→retire lifetime span
+    spans = TR.request_spans(obj)
+    assert set(spans) == set(res)
+    for rid, ev in spans.items():
+        assert ev["args"]["status"] == res[rid].status
+        assert ev["args"]["n_generated"] == res[rid].metrics.n_generated
+        assert ev["dur"] >= 0
+    # all three tracks are present and named
+    pids = {e["pid"] for e in obj["traceEvents"]}
+    assert {TR.PID_REQUESTS, TR.PID_SLOTS, TR.PID_SCHEDULER} <= pids
+    names = {(e["pid"], e["args"]["name"])
+             for e in obj["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert (TR.PID_REQUESTS, "requests") in names
+    assert (TR.PID_SLOTS, "slots") in names
+
+
+def test_trace_validator_rejects_malformed():
+    with pytest.raises(ValueError):
+        TR.validate_trace([])  # not the object form
+    with pytest.raises(ValueError):
+        TR.validate_trace({"traceEvents": [{"ph": "X", "pid": 1, "tid": 1,
+                                            "name": "x", "ts": 0.0}]})
+    with pytest.raises(ValueError):  # unknown phase
+        TR.validate_trace({"traceEvents": [{"ph": "?", "pid": 1, "tid": 1,
+                                            "name": "x", "ts": 0.0}]})
+    with pytest.raises(ValueError):  # non-int pid
+        TR.validate_trace({"traceEvents": [{"ph": "i", "pid": "1",
+                                            "tid": 1, "name": "x",
+                                            "ts": 0.0}]})
+
+
+def test_span_tracer_budget_drops_not_grows():
+    tr = TR.SpanTracer(max_events=8)
+    meta = len(tr.events)  # process metadata, emitted at construction
+    assert meta < 8
+    for i in range(100):
+        tr.instant(f"e{i}", TR.PID_SCHEDULER, 0, float(i))
+    # the buffer stopped at the budget; everything past it counted
+    # into ``dropped`` instead of growing the list
+    assert len(tr.events) == 8
+    assert tr.dropped == 100 - (8 - meta)
+    obj = tr.to_json()
+    assert obj["otherData"]["dropped_events"] == tr.dropped
+    TR.validate_trace(obj)
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder: ring bound under churn, events captured
+# ---------------------------------------------------------------------------
+
+def test_flight_recorder_ring_respects_bound_under_churn():
+    cfg, params = _setup()
+    eng, sched, res = _drain(cfg, params, telemetry=True, n=6,
+                             flight_ticks=4)
+    fr = eng.flight_recorder
+    assert sched.ticks > 4  # the drain churned past the capacity
+    assert len(fr) == 4
+    assert fr.recorded == sched.ticks
+    dump = fr.dump()
+    assert [d["tick"] for d in dump] == sorted(d["tick"] for d in dump)
+    assert dump[-1]["tick"] == sched.ticks
+    last = fr.last().as_dict()
+    for field in ("queue_depth", "n_active", "capacity",
+                  "batch_by_geometry", "prefill_chunks", "dispatch_delta",
+                  "sa_level", "pressure", "events"):
+        assert field in last, field
+    json.dumps(dump)  # JSON-ready incident payload
+
+
+def test_flight_recorder_captures_shed_and_quarantine_events():
+    cfg, params = _setup()
+    clock = _Clock()
+    eng = ServeEngine(params, cfg, max_len=64, telemetry=True,
+                      slo=SLOConfig(max_queue=1))
+    sched = eng.scheduler(slots_per_bucket=1, chunk=2,
+                          prefill_chunks_per_tick=8, clock=clock)
+    for i in range(3):  # queue bound 1 → rids 1, 2 shed at submit
+        sched.submit(Request(rid=i, tokens=_prompt(cfg, 16, seed=i),
+                             n_steps=8))
+        clock.advance(0.01)
+    # tick until rid 0 is resident, then poison its slot
+    while not sched.n_active():
+        sched.tick()
+        clock.advance(0.01)
+    eng.inject_fault(0)
+    res = sched.drain()
+    assert {f.status for f in res.values()} == {"shed", "failed"}
+    events = [e for d in eng.flight_recorder.dump() for e in d["events"]]
+    assert "shed:1" in events and "shed:2" in events
+    assert "failed:0" in events
+    # the shed/quarantine paths also counted into the registry
+    samples = TM.parse_prometheus_text(eng.metrics_text())
+    finished = {lb["status"]: v
+                for lb, v in samples["serve_requests_finished_total"]}
+    assert finished["shed"] == 2 and finished["failed"] == 1
+
+
+def test_flight_recorder_capacity_validation():
+    with pytest.raises(ValueError):
+        TM.FlightRecorder(0)
+    with pytest.raises(ValueError):
+        TR.SpanTracer(max_events=0)
+    with pytest.raises(ValueError):
+        TM.Histogram(reservoir=1)
+
+
+# ---------------------------------------------------------------------------
+# SLO dial: transitions counter
+# ---------------------------------------------------------------------------
+
+def test_load_tracker_counts_transitions_both_directions():
+    from repro.serve import LoadTracker
+    slo = SLOConfig(adaptive_sparsity=True, pressure_patience=1,
+                    max_queue=4)
+    lt = LoadTracker(slo)
+    assert lt.transitions == 0
+    lt.observe(4, 4)  # pressure 1.0 → up
+    assert lt.level == 1 and lt.transitions == 1
+    lt.observe(0, 4)  # pressure 0.0 → down
+    assert lt.level == 0 and lt.transitions == 2
