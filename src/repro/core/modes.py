@@ -20,6 +20,7 @@ TPU adaptation notes (DESIGN.md §2):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from dataclasses import dataclass
 from functools import partial
@@ -249,6 +250,82 @@ def streaming_valid(q_positions: jax.Array, kv_positions: jax.Array,
     return vis & ((kv < sink) | (q - kv < local))
 
 
+# Execution backend for ``chunk_causal_attention``: "dense" is the
+# fori_loop of masked einsums below; "pallas" routes to the
+# block-sparse selected-block kernel (kernels/block_sparse_attention),
+# which *skips* dead kv blocks instead of masking them; "auto" (the
+# ambient default) picks pallas on TPU and dense elsewhere, so CPU
+# tier-1 runs stay bitwise those of the reference path.  Like
+# ``model.use_decode_attn`` this is trace-time ambient state, not part
+# of any jit key — callers must install the same backend around every
+# trace of a given executable (the serving engine never switches
+# mid-lifetime).
+_CHUNK_ATTN_BACKEND = []
+
+CHUNK_ATTN_BACKENDS = ("auto", "dense", "pallas")
+
+
+@contextlib.contextmanager
+def chunk_attention_backend(backend: str, *, block: int = 128,
+                            interpret: Optional[bool] = None):
+    """Select the chunked-prefill attention engine (see above).
+    ``block`` is the Pallas kernel's MXU tile; ``interpret`` forces
+    interpret mode (None = interpret off-TPU, the testing convention)."""
+    if backend not in CHUNK_ATTN_BACKENDS:
+        raise ValueError(
+            f"chunk_attention_backend: {backend!r} not in "
+            f"{CHUNK_ATTN_BACKENDS}")
+    _CHUNK_ATTN_BACKEND.append((backend, block, interpret))
+    try:
+        yield
+    finally:
+        _CHUNK_ATTN_BACKEND.pop()
+
+
+def _chunk_backend() -> Tuple[str, int, Optional[bool]]:
+    backend, block, interpret = (_CHUNK_ATTN_BACKEND[-1]
+                                 if _CHUNK_ATTN_BACKEND
+                                 else ("auto", 128, None))
+    if backend == "auto":
+        backend = ("pallas" if jax.default_backend() == "tpu"
+                   else "dense")
+    return backend, block, interpret
+
+
+def _chunk_causal_block_sparse(q: jax.Array, k: jax.Array, v: jax.Array,
+                               start: jax.Array, *, block: int,
+                               scale: Optional[float],
+                               interpret: Optional[bool]) -> jax.Array:
+    """``chunk_causal_attention`` on the block-sparse Pallas kernel.
+
+    The causal structure is expressed as a per-query-block *selection*:
+    query block i (absolute rows [start+i·block, …)) selects kv blocks
+    [0, last_vis(i)] and marks the rest -1, which the kernel skips via
+    ``pl.when`` — dead blocks cost no MXU work.  ``start`` rides into
+    the kernel as a traced scalar-prefetch operand (the causal offset),
+    so every chunk of a bucket still shares one executable."""
+    from repro.kernels.block_sparse_attention import \
+        block_sparse_attention_bh
+    B, Hq, C, D = q.shape
+    Hkv, M = k.shape[1], k.shape[2]
+    nqb = -(-C // block)
+    K = -(-M // block)
+    qb = jnp.arange(nqb)
+    kb = jnp.arange(K)
+    # last kv block any live row of query block i can see; rows past C
+    # are padding (masked in-kernel), so bound by the last live row
+    last_vis = (start + jnp.minimum((qb + 1) * block, C) - 1) // block
+    sel = jnp.where(kb[None, :] <= last_vis[:, None], kb[None, :], -1)
+    sel = jnp.broadcast_to(sel[None], (B * Hq, nqb, K)).astype(jnp.int32)
+    out = block_sparse_attention_bh(
+        q.reshape(B * Hq, C, D), k.reshape(B * Hkv, M, D),
+        v.reshape(B * Hkv, M, D), sel, q_offset=start, scale=scale,
+        block=block,
+        interpret=(jax.default_backend() != "tpu"
+                   if interpret is None else interpret))
+    return out.reshape(B, Hq, C, out.shape[-1])
+
+
 def chunk_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                            start: jax.Array, *, kv_block: int = 512,
                            scale: Optional[float] = None) -> jax.Array:
@@ -263,8 +340,18 @@ def chunk_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     chunked prefill don't pay for cache they haven't written yet
     (a dense masked call over M would: XLA cannot skip masked FLOPs).
     ``start`` stays traced, preserving one executable per chunk bucket.
+
+    Under the "pallas" backend (``chunk_attention_backend``; the
+    default "auto" resolves to it on TPU) the same contract executes on
+    the block-sparse kernel via ``_chunk_causal_block_sparse``.
     """
     B, Hq, C, D = q.shape
+    if v.shape[-1] == D:  # the kernel assumes Dk == Dv (GQA layers)
+        backend, blk, interp = _chunk_backend()
+        if backend == "pallas":
+            return _chunk_causal_block_sparse(q, k, v, start, block=blk,
+                                              scale=scale,
+                                              interpret=interp)
     Hkv, M = k.shape[1], k.shape[2]
     G = Hq // Hkv
     Dv = v.shape[-1]

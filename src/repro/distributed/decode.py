@@ -134,9 +134,13 @@ def make_distributed_dot_decode(mesh, kv_axes: Tuple[str, ...],
     """Adapter matching ``repro.models.model._dot_decode``'s signature,
     installed via ``model.use_decode_attn`` by the launch layer.
     Declines (returns None) for short caches — ring buffers stay on the
-    local path."""
-    def fn(q, k, v, valid):
+    local path — and for any non-shared mask (``valid.ndim != 1``,
+    which includes pooled per-slot validity: slot pools batch short
+    requests, the opposite regime from sequence-sharded 500K)."""
+    def fn(q, k, v, valid, scale=None):
         if valid.ndim != 1 or k.shape[2] < min_seq:
             return None
-        return lse_combine_decode(q, k, v, valid, mesh, kv_axes)
+        return lse_combine_decode(q, k, v, valid, mesh, kv_axes,
+                                  scale=scale)
+    fn.supports_scale = True
     return fn

@@ -2,6 +2,7 @@ from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
     block_sparse_attention,
     decode_attention,
+    decode_attention_pooled,
     flash_attention,
     streaming_attention,
 )

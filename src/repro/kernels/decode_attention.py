@@ -1,21 +1,36 @@
-"""Pallas TPU flash-decode kernel: one query token vs a KV cache.
+"""Pallas TPU flash-decode kernels: one query token vs a KV cache.
 
 Split-KV with LSE accumulation: the grid's inner axis walks KV blocks;
 VMEM scratch carries (acc, m, l).  Works for both the FullKV cache
 (positions = arange, validity = pos ≤ cur) and the sink+local RingKV
 cache (positions = ring slots' absolute positions, -1 = empty) — the
-mask comes from a (L,) positions array, so one kernel serves every
-decode mode of the paper's sparse-decode deployment (§3.3).
+mask comes from a positions array, so one kernel serves every decode
+mode of the paper's sparse-decode deployment (§3.3).
+
+Two entry points:
+
+* ``decode_attention_bh`` — single shared (L,) positions vector for the
+  whole batch (the batch-synchronous ``generate`` path).
+* ``decode_attention_pooled_bh`` — per-row (B,) live-prefix lengths and
+  (B, L) positions for the continuous-batching slot pool, where every
+  slot sits at a different decode depth.  The per-row length rides in
+  as a scalar-prefetch operand so the KV BlockSpec index map clamps
+  dead grid steps onto the last live block (the pipeline elides the
+  repeat fetch → expressed HBM traffic scales with the live prefix) and
+  ``pl.when`` short-circuits their compute — block *skipping*, not
+  masking.
 
 The decode phase is memory-bandwidth bound; the kernel's useful work
 per HBM byte is fixed, so the paper's speedup comes from the *shape*
-of the cache this kernel is pointed at (ring ≪ full), not from the
-kernel itself — exactly the layer-level contiguity argument.
+of the cache this kernel is pointed at (ring ≪ full, live ≪ capacity),
+not from the kernel itself — exactly the layer-level contiguity
+argument.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +42,31 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or pltpu.TPUCompilerParams
 
 NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class PooledValid:
+    """Per-slot decode validity, the pooled override vocabulary.
+
+    ``mask`` is the dense-fallback boolean mask exactly as
+    ``_dot_decode``'s einsum path expects it ((B, 1, L) for GQA
+    caches, (B, S) for MLA absorbed decode); ``lengths`` is the (B,)
+    int32 live-prefix count per slot (0 = dead/free slot); and
+    ``positions`` is the optional (B, L) int32 absolute-position map
+    with -1 marking empty ring entries — ``None`` means the trivial
+    FullKV layout (slot i of the buffer holds position i) and lets the
+    kernel synthesize arange rather than shipping it.
+    """
+    mask: jax.Array
+    lengths: jax.Array
+    positions: Optional[jax.Array] = None
+
+    @property
+    def ndim(self) -> int:
+        # legacy adapters probe valid.ndim to decline non-1-D masks;
+        # answering with the dense mask's rank keeps them declining
+        # gracefully instead of crashing
+        return self.mask.ndim
 
 
 def _kernel(q_ref, k_ref, v_ref, pos_ref, cur_ref, o_ref, acc, m_scr, l_scr,
@@ -106,22 +146,178 @@ def decode_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array,
     return out
 
 
+def _pooled_kernel(len_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                   acc, m_scr, l_scr, *, scale: float, block_k: int,
+                   n_heads: int):
+    """Grid (B·Hq, max-blocks); row b serves (batch b//Hq, head b%Hq).
+
+    ``len_ref`` (scalar prefetch, (B,)) is the live-prefix length per
+    slot; blocks past ``ceil(n / block_k)`` are short-circuited — their
+    KV fetch was already clamped onto the last live block by the index
+    map, so skipped steps cost neither HBM bytes nor FLOPs."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    n = len_ref[b // n_heads]
+    nb = (n + block_k - 1) // block_k     # per-row traced trip count
+
+    @pl.when(j < nb)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (1, Dk) — single token
+        k = k_ref[0].astype(jnp.float32)  # (bk, Dk)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        col = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        # live prefix ∧ occupied ring entry (-1 = empty); FullKV rows
+        # carry arange positions so only the prefix bound bites
+        mask = (pos_ref[...] >= 0) & (col < n)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+        acc[...] = acc[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fin():
+        # n = 0 (free slot parked in the pool) finalizes acc=0 / l=0 →
+        # zeros: finite garbage the scheduler never reads, matching the
+        # dense path's convention that dead rows only need finiteness
+        o_ref[0] = (acc[...] / jnp.maximum(l_scr[...], 1e-20)
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention_pooled_bh(q: jax.Array, k: jax.Array, v: jax.Array,
+                               positions: jax.Array, lengths: jax.Array,
+                               *, n_heads: int,
+                               scale: Optional[float] = None,
+                               block_k: int = 128,
+                               interpret: bool = False) -> jax.Array:
+    """Batched pooled decode: q (B·Hq, 1, Dk); k (B·Hkv, L, Dk);
+    v (B·Hkv, L, Dv); positions (B, L) int32 (-1 empty); lengths (B,)
+    int32 live-prefix counts.  Dk may differ from Dv (MLA absorbed
+    decode: Dk = R + rope, Dv = R).  Returns (B·Hq, 1, Dv)."""
+    BH, _, Dk = q.shape
+    BHkv, L = k.shape[0], k.shape[1]
+    Dv = v.shape[2]
+    G = BH // BHkv
+    scale = Dk ** -0.5 if scale is None else scale
+    L_p = -(-L // block_k) * block_k
+    if L_p != L:
+        k = jnp.pad(k, ((0, 0), (0, L_p - L), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, L_p - L), (0, 0)))
+        positions = jnp.pad(positions.astype(jnp.int32),
+                            ((0, 0), (0, L_p - L)), constant_values=-1)
+    lengths = jnp.minimum(lengths.astype(jnp.int32), L)
+    positions = positions.astype(jnp.int32)
+    grid = (BH, L_p // block_k)
+
+    def live_block(b, j, len_ref):
+        # clamp dead steps onto the last live block: the pipeline sees
+        # the same block index as the previous step and elides the
+        # fetch, so HBM traffic tracks ceil(n / block_k), not L/block_k
+        n = len_ref[b // n_heads]
+        nb = jnp.maximum((n + block_k - 1) // block_k, 1)
+        return jnp.minimum(j, nb - 1)
+
+    def kv_map(b, j, len_ref):
+        return (b // G, live_block(b, j, len_ref), 0)
+
+    def pos_map(b, j, len_ref):
+        return (b // n_heads, live_block(b, j, len_ref))
+
+    out = pl.pallas_call(
+        functools.partial(_pooled_kernel, scale=scale, block_k=block_k,
+                          n_heads=n_heads),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, Dk), lambda b, j, lens: (b, 0, 0)),
+                pl.BlockSpec((1, block_k, Dk), kv_map),
+                pl.BlockSpec((1, block_k, Dv), kv_map),
+                pl.BlockSpec((1, block_k), pos_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, Dv), lambda b, j, lens: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, Dv), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((BH, 1, Dv), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, q, k, v, positions)
+    return out
+
+
 def make_kernel_decode_attn(*, block_k: int = 128,
                             min_len: int = 2 * 128,
                             interpret: Optional[bool] = None):
-    """Adapter installing this kernel as the serving decode backend.
+    """Adapter installing these kernels as the serving decode backend.
 
     Returns an fn matching ``repro.models.model.use_decode_attn``'s
-    protocol: fn(q (B,Hq,1,D), k/v (B,Hkv,L,D), valid (L,) bool) →
-    (B,Hq,1,D), or None to decline (per-KV-head masks from duo head
-    splits, and rings shorter than ``min_len`` where the dense dot
-    wins).  The (L,) validity mask is re-expressed in the kernel's
-    positions/-1 vocabulary, so FullKV prefixes and RingKV occupancy
-    masks both land on the same executable shape.
+    protocol: fn(q (B,Hq,1,Dk), k/v (B,Hkv,L,D*), valid, scale=None) →
+    (B,Hq,1,Dv), or None to decline.  ``valid`` is either the legacy
+    (L,) shared mask (batch-synchronous ``generate``) — re-expressed in
+    the kernel's positions/-1 vocabulary — or a :class:`PooledValid`
+    carrying per-slot lengths/positions, which routes to the batched
+    pooled kernel (FullKV, RingKV, and — via the q/k/v re-expression in
+    ``attention.mla_absorbed_qkv`` — MLA absorbed decode).
+
+    Declines (→ dense fallback) when the cache is shorter than
+    ``min_len`` (the dense dot wins on tiny rings) or when the mask
+    shape is one the kernels don't speak (per-KV-head duo masks).
+    Every install/decline decision is appended to ``fn.trace_log`` as
+    ``(event, reason)`` — the adapter is consulted at *trace* time
+    (once per attention layer per executable), so the engine drains the
+    log after each jit dispatch to drive its kernel-path counters.
     """
+    trace_log: List[Tuple[str, str]] = []
+
+    def _note(event: str, reason: str) -> None:
+        trace_log.append((event, reason))
+
     def fn(q: jax.Array, k: jax.Array, v: jax.Array,
-           valid: jax.Array) -> Optional[jax.Array]:
+           valid, scale: Optional[float] = None) -> Optional[jax.Array]:
+        interp = (jax.default_backend() != "tpu"
+                  if interpret is None else interpret)
+        if isinstance(valid, PooledValid):
+            L = k.shape[2]
+            if L < min_len:
+                _note("decline", "min_len")
+                return None
+            B, Hq, _, Dk = q.shape
+            Hkv, Dv = k.shape[1], v.shape[3]
+            if valid.positions is None:
+                positions = jnp.broadcast_to(
+                    jnp.arange(L, dtype=jnp.int32)[None, :], (B, L))
+            else:
+                positions = valid.positions
+            out = decode_attention_pooled_bh(
+                q.reshape(B * Hq, 1, Dk), k.reshape(B * Hkv, L, Dk),
+                v.reshape(B * Hkv, L, Dv), positions, valid.lengths,
+                n_heads=Hq, scale=scale, block_k=block_k,
+                interpret=interp)
+            _note("hit", "pooled")
+            return out.reshape(B, Hq, 1, Dv)
         if valid.ndim != 1 or k.shape[2] < min_len:
+            _note("decline",
+                  "mask_rank" if valid.ndim != 1 else "min_len")
             return None
         B, Hq, _, D = q.shape
         Hkv, L = k.shape[1], k.shape[2]
@@ -129,8 +325,19 @@ def make_kernel_decode_attn(*, block_k: int = 128,
         out = decode_attention_bh(
             q.reshape(B * Hq, 1, D), k.reshape(B * Hkv, L, D),
             v.reshape(B * Hkv, L, D), positions, jnp.int32(L),
-            block_k=block_k,
-            interpret=(jax.default_backend() != "tpu"
-                       if interpret is None else interpret))
+            scale=scale, block_k=block_k, interpret=interp)
+        _note("hit", "shared")
         return out.reshape(B, Hq, 1, D)
+
+    def drain_log() -> List[Tuple[str, str]]:
+        out = list(trace_log)
+        trace_log.clear()
+        return out
+
+    fn.supports_pooled = True
+    fn.supports_scale = True
+    fn.trace_log = trace_log
+    fn.drain_log = drain_log
+    fn.block_k = block_k
+    fn.min_len = min_len
     return fn

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 
 from repro.kernels.block_sparse_attention import (block_sparse_attention_bh,
                                                   dedupe_selection)
-from repro.kernels.decode_attention import decode_attention_bh
+from repro.kernels.decode_attention import (decode_attention_bh,
+                                            decode_attention_pooled_bh)
 from repro.kernels.flash_attention import flash_attention_bh
 from repro.kernels.streaming_attention import streaming_attention_bh
 
@@ -79,14 +80,32 @@ def decode_attention(q, k, v, positions, cur_pos, *, block_k: int = 128,
     return _unflatten(out, B, H)
 
 
+@functools.partial(jax.jit, static_argnames=("block_k", "scale",
+                                             "interpret"))
+def decode_attention_pooled(q, k, v, positions, lengths, *,
+                            block_k: int = 128,
+                            scale: Optional[float] = None,
+                            interpret: Optional[bool] = None):
+    """Pooled decode: q (B,Hq,1,Dk); k/v (B,Hkv,L,D*); positions (B,L)
+    int32 (-1 empty); lengths (B,) int32 live-prefix counts."""
+    interpret = default_interpret() if interpret is None else interpret
+    B, H = q.shape[:2]
+    out = decode_attention_pooled_bh(
+        _flatten(q), _flatten(k), _flatten(v), positions, lengths,
+        n_heads=H, scale=scale, block_k=block_k, interpret=interpret)
+    return _unflatten(out, B, H)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def block_sparse_attention(q, k, v, sel, *, block: int = 128,
+def block_sparse_attention(q, k, v, sel, *, q_offset=0, block: int = 128,
                            interpret: Optional[bool] = None):
-    """sel (B,Hq,nqb,K) int32 kv-block indices (scorer output)."""
+    """sel (B,Hq,nqb,K) int32 kv-block indices (scorer output);
+    ``q_offset`` (traced scalar ok) shifts the causal comparison for
+    chunked callers."""
     interpret = default_interpret() if interpret is None else interpret
     B, H = q.shape[:2]
     sel = dedupe_selection(sel.reshape(B * H, *sel.shape[2:]))
     out = block_sparse_attention_bh(
-        _flatten(q), _flatten(k), _flatten(v), sel, block=block,
-        interpret=interpret)
+        _flatten(q), _flatten(k), _flatten(v), sel, q_offset=q_offset,
+        block=block, interpret=interpret)
     return _unflatten(out, B, H)

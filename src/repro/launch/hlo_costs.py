@@ -246,3 +246,158 @@ class HloCostModel:
 
 def loop_aware_costs(hlo_text: str) -> Cost:
     return HloCostModel(hlo_text).entry_cost()
+
+
+# ---------------------------------------------------------------------------
+# Pooled-decode expressed-cost report
+# ---------------------------------------------------------------------------
+#
+# ``compiled.cost_analysis()`` on a pooled decode tick reports the cost
+# the *program text* expresses, and the dense pooled path expresses a
+# full (B, Hkv, L, D) KV read every tick regardless of how short the
+# live prefixes are — the mask hides padding from the *result*, not from
+# the roofline.  The Pallas kernel's per-row trip count
+# (ceil(len_b / block_k), dead grid steps collapsed onto a repeat fetch
+# by the index-map clamp) makes the expressed bytes/FLOPs track the
+# LIVE prefix instead.  This section computes both analytically so the
+# scaling claim is auditable without a TPU: sweep mean live length at a
+# fixed buffer capacity and the dense column stays flat while the
+# kernel column grows linearly.
+#
+# Counting conventions (deliberately conservative for the kernel):
+#   * dense KV bytes    = B · Hkv · L_buf · (Dk + Dv) · dtype_bytes
+#     (each batch row streams the whole buffer once; heads broadcast)
+#   * kernel KV bytes   = Hq · Σ_b ceil(min(len_b, L_buf)/bk) · bk
+#                         · (Dk + Dv) · dtype_bytes
+#     (the grid iterates B·Hq rows and the kv index map is keyed on
+#     b//G, so consecutive q-heads of one kv group REFETCH their
+#     blocks — the honest per-grid-step count, not the ideal one)
+#   * FLOPs             = 2 · (same block counts) · Hq per q-row
+# Tiny q/output traffic (B·Hq·(Dk+Dv)) is omitted from both columns.
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def ragged_lengths(batch: int, live_max: int) -> List[int]:
+    """Deterministic mixed-length pool: evenly spaced 1..live_max."""
+    live_max = max(1, live_max)
+    return [max(1, round(live_max * (i + 1) / batch))
+            for i in range(batch)]
+
+
+def pooled_decode_attn_cost(lengths: List[int], buffer_len: int, *,
+                            n_q_heads: int, n_kv_heads: int,
+                            d_k: int, d_v: int, block_k: int = 128,
+                            dtype_bytes: int = 4) -> Dict[str, float]:
+    """Expressed HBM bytes and MXU FLOPs for ONE pooled attention
+    consult (one layer, one decode step), dense vs kernel."""
+    B = len(lengths)
+    row_bytes = (d_k + d_v) * dtype_bytes
+    dense_bytes = B * n_kv_heads * buffer_len * row_bytes
+    dense_flops = 2.0 * B * n_q_heads * buffer_len * (d_k + d_v)
+    kv_cols = sum(_ceil_div(min(n, buffer_len), block_k) * block_k
+                  for n in lengths)
+    kernel_bytes = n_q_heads * kv_cols * row_bytes
+    kernel_flops = 2.0 * n_q_heads * kv_cols * (d_k + d_v)
+    return {
+        "dense_hbm_bytes": float(dense_bytes),
+        "kernel_hbm_bytes": float(kernel_bytes),
+        "dense_flops": dense_flops,
+        "kernel_flops": kernel_flops,
+        "bytes_ratio": kernel_bytes / max(dense_bytes, 1),
+    }
+
+
+def pooled_decode_report(cfg, *, max_len: int, batch: int = 8,
+                         block_k: int = 128, dtype_bytes: int = 4,
+                         fracs=(0.125, 0.25, 0.5, 0.75, 1.0)) -> Dict:
+    """Per-tick expressed-cost sweep for every decode geometry the slot
+    pool routes for ``cfg`` (a ModelConfig): FullKV (buffer = max_len),
+    RingKV (buffer = sink + local, when flux routing is on) and MLA
+    absorbed decode (latent KV, Hkv = 1) when the config is MLA.
+
+    Each row fixes the buffer capacity and sweeps the mean live prefix;
+    dense bytes are constant down the sweep while kernel bytes scale
+    with the live prefix — the acceptance check for the pooled kernel.
+    """
+    geoms = []
+    if cfg.kv_lora_rank:
+        d_k = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        geoms.append(("mla-fullkv", max_len, cfg.num_heads, 1,
+                      d_k, cfg.kv_lora_rank))
+    else:
+        geoms.append(("fullkv", max_len, cfg.num_heads, cfg.num_kv_heads,
+                      cfg.head_dim, cfg.head_dim))
+    flux = getattr(cfg, "flux", None)
+    if flux is not None and getattr(flux, "enabled", False):
+        ring = min(flux.sink + flux.local, max_len)
+        if cfg.kv_lora_rank:
+            d_k = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+            geoms.append(("mla-ringkv", ring, cfg.num_heads, 1,
+                          d_k, cfg.kv_lora_rank))
+        else:
+            geoms.append(("ringkv", ring, cfg.num_heads,
+                          cfg.num_kv_heads, cfg.head_dim, cfg.head_dim))
+    report: Dict = {"batch": batch, "block_k": block_k,
+                    "dtype_bytes": dtype_bytes, "geometries": {}}
+    for name, buf, hq, hkv, dk, dv in geoms:
+        rows = []
+        for frac in fracs:
+            lens = ragged_lengths(batch, int(round(frac * buf)))
+            cost = pooled_decode_attn_cost(
+                lens, buf, n_q_heads=hq, n_kv_heads=hkv, d_k=dk, d_v=dv,
+                block_k=block_k, dtype_bytes=dtype_bytes)
+            rows.append({"live_frac": frac, "mean_len":
+                         sum(lens) / len(lens), **cost})
+        report["geometries"][name] = {
+            "buffer_len": buf, "n_q_heads": hq, "n_kv_heads": hkv,
+            "d_k": dk, "d_v": dv, "rows": rows}
+    return report
+
+
+def format_pooled_report(report: Dict) -> str:
+    out = []
+    for name, g in report["geometries"].items():
+        out.append(f"{name}: buffer={g['buffer_len']} Hq={g['n_q_heads']} "
+                   f"Hkv={g['n_kv_heads']} Dk={g['d_k']} Dv={g['d_v']}")
+        out.append(f"  {'live':>6} {'mean_len':>9} {'dense MB':>10} "
+                   f"{'kernel MB':>10} {'ratio':>7}")
+        for r in g["rows"]:
+            out.append(
+                f"  {r['live_frac']:>6.3f} {r['mean_len']:>9.1f} "
+                f"{r['dense_hbm_bytes'] / 1e6:>10.3f} "
+                f"{r['kernel_hbm_bytes'] / 1e6:>10.3f} "
+                f"{r['bytes_ratio']:>7.3f}")
+    return "\n".join(out)
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    from repro.configs import ALL_ARCHS, get_config, smoke_variant
+
+    ap = argparse.ArgumentParser(
+        description="Analytic expressed-cost report for pooled decode")
+    ap.add_argument("--arch", choices=ALL_ARCHS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--max-len", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--block-k", type=int, default=128)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also dump the report as JSON")
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    report = pooled_decode_report(cfg, max_len=args.max_len,
+                                  batch=args.batch, block_k=args.block_k)
+    print(format_pooled_report(report))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,10 +22,11 @@ import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config, smoke_variant
 from repro.data.synthetic import SyntheticTasks
+from repro.kernels.decode_attention import make_kernel_decode_attn
 from repro.models import model as MD
 from repro.serve import (Request, ServeEngine, SLOConfig, STATUS_OK,
                          SHED_POLICIES, SHED_REJECT_NEWEST,
-                         serve_batch_finished)
+                         kv_cache, serve_batch_finished)
 from repro.train import checkpoint
 
 
@@ -104,6 +105,46 @@ def _serve_continuous(engine: ServeEngine, reqs, args) -> None:
               f"snapshots={s.snapshots}")
 
 
+def _decode_kernel(cfg, args, max_len: int):
+    """Build the decode-attention backend named by --decode-kernel.
+
+    'on' is the loud variant: if every geometry this engine can route
+    (FullKV buffers at ``max_len``, SA rings at sink+local) falls under
+    the adapter's ``min_len`` decline threshold, the kernel would be
+    accepted at construction yet decline every single call — the
+    silent-forever failure ISSUE 8 closes.  Refuse to start instead."""
+    if args.decode_kernel == "off":
+        return None
+    block_k = args.kernel_block_k
+    min_len = 2 * block_k
+    if args.decode_kernel == "on":
+        candidates = {"full-cache": max_len}
+        if cfg.flux.enabled:
+            candidates["sa-ring"] = min(kv_cache.ring_size(cfg.flux),
+                                        max_len)
+        if all(length < min_len for length in candidates.values()):
+            detail = " ".join(f"{name}={length}" for name, length
+                              in sorted(candidates.items()))
+            raise SystemExit(
+                f"--decode-kernel on: no routed geometry can satisfy "
+                f"the kernel's shape constraints — every cache extent "
+                f"({detail}) is below min_len={min_len} "
+                f"(= 2·block_k), so the adapter would decline every "
+                f"call and serve dense forever.  Lower --kernel-block-k "
+                f"or raise --prompt-len/--gen-len.")
+    return make_kernel_decode_attn(block_k=block_k, min_len=min_len)
+
+
+def _print_kernel_summary(engine: ServeEngine) -> None:
+    if engine.decode_attn is None:
+        return
+    s = engine.decode_kernel_summary()
+    declines = " ".join(f"{r}={n}" for r, n in
+                        sorted(s["decline_layers"].items())) or "none"
+    print(f"decode kernel: dispatches={s['dispatches']} "
+          f"hit_layers={s['hit_layers']} declines: {declines}")
+
+
 def _write_telemetry(engine: ServeEngine, args) -> None:
     """Export the run's telemetry to the paths the flags named (no-op
     when neither flag was passed)."""
@@ -127,6 +168,18 @@ def main() -> None:
     ap.add_argument("--load", default=None)
     ap.add_argument("--dense", action="store_true",
                     help="disable sparse decode (paper's non-shaded rows)")
+    ap.add_argument("--decode-kernel", choices=("off", "auto", "on"),
+                    default="off",
+                    help="Pallas flash-decode backend for the decode "
+                         "scan: 'auto' installs it and lets the adapter "
+                         "decline per-layer (dense fallback below "
+                         "min_len = 2·block_k); 'on' additionally "
+                         "refuses to start if NO routed geometry could "
+                         "ever satisfy the kernel's shape constraints "
+                         "(the silently-declining-forever trap)")
+    ap.add_argument("--kernel-block-k", type=int, default=128,
+                    help="KV block size of the decode kernel; the "
+                         "adapter's min_len heuristic is 2·block_k")
     ap.add_argument("--continuous", action="store_true",
                     help="slot-pool continuous batching instead of "
                          "batch-synchronous bucketing")
@@ -199,16 +252,18 @@ def main() -> None:
         aging_s=args.aging_s or None,
         adaptive_sparsity=args.adaptive_sparsity)
     telemetry = bool(args.metrics_out or args.trace_out)
-    engine = ServeEngine(params, cfg,
-                         max_len=(args.prompt_len + args.shared_prefix
-                                  + args.gen_len + 8),
+    max_len = args.prompt_len + args.shared_prefix + args.gen_len + 8
+    decode_attn = _decode_kernel(cfg, args, max_len)
+    engine = ServeEngine(params, cfg, max_len=max_len,
                          sparse_decode=not args.dense,
+                         decode_attn=decode_attn,
                          prefill_chunk=args.prefill_chunk or None,
                          prefix_cache_mb=args.prefix_cache_mb or None,
                          prefix_cache_host_mb=args.prefix_cache_host_mb,
                          slo=slo, telemetry=telemetry)
     if args.continuous:
         _serve_continuous(engine, reqs, args)
+        _print_kernel_summary(engine)
         _write_telemetry(engine, args)
         return
     t0 = time.time()
@@ -220,6 +275,7 @@ def main() -> None:
     n_ok = sum(f.status == STATUS_OK for f in results.values())
     print(f"{len(reqs)} requests ({n_ok} ok), {args.gen_len} tokens each, "
           f"{dt:.2f}s wall")
+    _print_kernel_summary(engine)
     _write_telemetry(engine, args)
 
 

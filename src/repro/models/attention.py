@@ -176,3 +176,46 @@ def mla_absorbed_decode(params, cfg: ModelConfig, x: jax.Array,
     """Single-token absorbed decode: x (B,1,d), valid (B,S) → (B,1,d)."""
     return mla_absorbed_attend(params, cfg, x, position, ckv_cache,
                                kr_cache, valid[:, None, :])
+
+
+def mla_absorbed_qkv(params, cfg: ModelConfig, x: jax.Array,
+                     position: jax.Array, ckv_cache: jax.Array,
+                     kr_cache: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array, float]:
+    """Re-express absorbed MLA decode as a GQA-shaped (q, k, v, scale).
+
+    The absorbed score  q_lat·ckv + q_rope·kr  is an inner product over
+    the concatenated (R + rope) axis, so a flash-decode kernel that
+    only speaks q·kᵀ can run it verbatim with
+      q_eff = [q_lat ‖ q_rope]           (B, H, 1, R+rope)
+      k_eff = [ckv ‖ kr]                 (B, 1, S, R+rope)   (Hkv = 1)
+      v_eff = ckv                        (B, 1, S, R)
+    The kernel's softmax(scores)·v_eff then yields the latent context
+    ctx (B, H, 1, R); ``mla_absorbed_finish`` applies the absorbed
+    W_uv and output projection.  Note Dk = R+rope ≠ Dv = R.
+    """
+    B = x.shape[0]
+    H, R = cfg.num_heads, cfg.kv_lora_rank
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    dv = cfg.v_head_dim
+    q, _ = mla_q(params, cfg, x, position)  # (B,H,1,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    w_uk = params["w_ukv"].reshape(R, H, nope + dv)[:, :, :nope]
+    q_lat = jnp.einsum("bhqn,rhn->bhqr", q_nope, w_uk)  # (B,H,1,R)
+    q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)
+    S = ckv_cache.shape[1]
+    k_eff = jnp.concatenate(
+        [ckv_cache[:, None],
+         jnp.broadcast_to(kr_cache, (B, 1, S, rope))], axis=-1)
+    v_eff = ckv_cache[:, None]
+    return q_eff, k_eff, v_eff, (nope + rope) ** -0.5
+
+
+def mla_absorbed_finish(params, cfg: ModelConfig,
+                        ctx: jax.Array) -> jax.Array:
+    """Latent context ctx (B,H,1,R) → output projection (B,1,d)."""
+    H, R = cfg.num_heads, cfg.kv_lora_rank
+    nope, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+    w_uv = params["w_ukv"].reshape(R, H, nope + dv)[:, :, nope:]
+    attn = jnp.einsum("bhqr,rhv->bhqv", ctx, w_uv)  # (B,H,1,dv)
+    return mla_out(params, cfg, attn)

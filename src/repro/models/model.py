@@ -38,6 +38,7 @@ from repro.distributed import constrain
 from repro.models import attention as A
 from repro.models import moe as MOE
 from repro.models import ssm as S
+from repro.kernels.decode_attention import PooledValid
 from repro.models.layers import (dense_init, embed_init, ffn_apply, ffn_init,
                                  rms_norm, rms_norm_init)
 from repro.serve import kv_cache as KC
@@ -538,8 +539,8 @@ def _decode_attn_full(bp, cfg, x, pos, cache: KC.FullKV):
         ckv, kr = A.mla_latent(bp["attn"], cfg, x, positions)
         cache = KC.latent_insert(cache, ckv, kr, pos)
         valid = _causal_valid(cache.ckv.shape[1], pos, x.shape[0])
-        y = A.mla_absorbed_decode(bp["attn"], cfg, x, positions,
-                                  cache.ckv, cache.kr, valid)
+        y = _mla_decode(bp, cfg, x, positions, cache.ckv, cache.kr,
+                        valid, lengths=cache.length, ring_positions=None)
         return y, cache
     q, k, v, _ = A.gqa_qkv(bp["attn"], cfg, x, positions)
     cache = _full_kv_insert(cache, k, v, pos)
@@ -548,10 +549,38 @@ def _decode_attn_full(bp, cfg, x, pos, cache: KC.FullKV):
         # distributed decode overrides
         valid = jnp.arange(cache.k.shape[2]) <= pos  # (Smax,)
     else:
-        # per-slot positions → (B, 1, Smax) per-row mask
-        valid = _causal_valid(cache.k.shape[2], pos, x.shape[0])[:, None]
+        # per-slot positions → pooled validity: the dense (B, 1, Smax)
+        # mask plus the (B,) live-prefix lengths a pooled kernel trips
+        # on (FullKV slot i holds position i, so positions=None)
+        valid = PooledValid(
+            mask=_causal_valid(cache.k.shape[2], pos,
+                               x.shape[0])[:, None],
+            lengths=cache.length)
     o = _dot_decode(q, cache.k, cache.v, valid)
     return A.gqa_out(bp["attn"], cfg, o), cache
+
+
+def _mla_decode(bp, cfg, x, positions, ckv, kr, valid, *, lengths,
+                ring_positions):
+    """Absorbed MLA decode step with the override fast path.
+
+    When a pooled-capable decode override is installed, the absorbed
+    attention is re-expressed as GQA-shaped (q, k, v) with Hkv = 1
+    (``mla_absorbed_qkv``) and offered with per-slot validity; the
+    kernel returns the latent context and ``mla_absorbed_finish``
+    applies the absorbed output projection.  Decline → dense absorbed
+    softmax, bit-for-bit the old path."""
+    if _DECODE_ATTN_OVERRIDE and getattr(
+            _DECODE_ATTN_OVERRIDE[-1], "supports_pooled", False):
+        q_eff, k_eff, v_eff, scale = A.mla_absorbed_qkv(
+            bp["attn"], cfg, x, positions, ckv, kr)
+        pv = PooledValid(mask=valid, lengths=lengths,
+                         positions=ring_positions)
+        ctx = _consult_decode_attn(q_eff, k_eff, v_eff, pv, scale=scale)
+        if ctx is not None:
+            return A.mla_absorbed_finish(bp["attn"], cfg, ctx)
+    return A.mla_absorbed_decode(bp["attn"], cfg, x, positions, ckv, kr,
+                                 valid)
 
 
 def _decode_attn_ring(bp, cfg, x, pos, cache, sink: int, local: int):
@@ -561,8 +590,12 @@ def _decode_attn_ring(bp, cfg, x, pos, cache, sink: int, local: int):
         ckv, kr = A.mla_latent(bp["attn"], cfg, x, positions)
         cache = KC.ring_latent_insert(cache, ckv, kr, pos, sink, local)
         valid = (cache.positions >= 0) & (cache.positions <= pos_col)
-        y = A.mla_absorbed_decode(bp["attn"], cfg, x, positions, cache.ckv,
-                                  cache.kr, valid)
+        ring = cache.positions.shape[1]
+        y = _mla_decode(bp, cfg, x, positions, cache.ckv, cache.kr,
+                        valid,
+                        lengths=jnp.minimum(cache.length, ring),
+                        ring_positions=jnp.where(valid, cache.positions,
+                                                 -1))
         return y, cache
     q, k, v, _ = A.gqa_qkv(bp["attn"], cfg, x, positions)
     cache = KC.ring_insert(cache, k, v, pos, sink, local)
@@ -573,9 +606,17 @@ def _decode_attn_ring(bp, cfg, x, pos, cache, sink: int, local: int):
         # decode-attention overrides
         valid = (cache.positions[0] >= 0) & (cache.positions[0] <= pos)
     else:
-        # per-slot (B, ring) bookkeeping → (B, 1, ring) per-row mask
-        valid = ((cache.positions >= 0)
-                 & (cache.positions <= pos_col))[:, None]
+        # per-slot (B, ring) bookkeeping → pooled validity.  Ring
+        # occupancy is a contiguous slot prefix of min(length, ring)
+        # entries, so a pooled kernel trips on that count; positions
+        # outside the dense mask are re-marked -1 so the kernel's
+        # occupancy test is structurally identical to the dense mask.
+        mask2 = (cache.positions >= 0) & (cache.positions <= pos_col)
+        valid = PooledValid(
+            mask=mask2[:, None],
+            lengths=jnp.minimum(cache.length,
+                                cache.positions.shape[1]),
+            positions=jnp.where(mask2, cache.positions, -1))
     o = _dot_decode(q, cache.k, cache.v, valid)
     return A.gqa_out(bp["attn"], cfg, o), cache
 
@@ -622,14 +663,42 @@ def _full_kv_insert(cache: KC.FullKV, k_new, v_new, pos) -> KC.FullKV:
     return KC.full_insert(cache, k_new, v_new, pos)
 
 
+def _consult_decode_attn(q, k, v, valid, scale=None):
+    """Offer a decode to the installed override; None = run dense.
+
+    Capability negotiation keeps legacy overrides (the distributed
+    LSE-combine adapter, test fakes) callable with their historical
+    4-positional signature: :class:`PooledValid` is only handed to fns
+    advertising ``supports_pooled``, and a non-default ``scale`` only
+    to fns advertising ``supports_scale``."""
+    if not _DECODE_ATTN_OVERRIDE:
+        return None
+    fn = _DECODE_ATTN_OVERRIDE[-1]
+    if isinstance(valid, PooledValid) and not getattr(
+            fn, "supports_pooled", False):
+        return None
+    if scale is not None:
+        if not getattr(fn, "supports_scale", False):
+            return None
+        return fn(q, k, v, valid, scale=scale)
+    return fn(q, k, v, valid)
+
+
 def _dot_decode(q, k, v, valid):
     """q (B,H,1,D), k/v (B,Hkv,L,D) → (B,H,1,D).
 
     valid is (L,) shared, (Hkv,L) per-kv-head (head-split baselines),
-    or (B,Hkv_or_1,L) per-row (continuous-batching slot pools, where
-    every row is a different request at its own position)."""
-    if _DECODE_ATTN_OVERRIDE and valid.ndim == 1:
-        out = _DECODE_ATTN_OVERRIDE[-1](q, k, v, valid)
+    (B,Hkv_or_1,L) per-row, or a :class:`PooledValid` carrying per-slot
+    lengths/positions next to its dense (B,1,L) mask (continuous-
+    batching slot pools, where every row is a different request at its
+    own position — the batched pooled kernel's home turf)."""
+    if isinstance(valid, PooledValid):
+        out = _consult_decode_attn(q, k, v, valid)
+        if out is not None:
+            return out
+        valid = valid.mask  # decline → dense per-row path
+    elif _DECODE_ATTN_OVERRIDE and valid.ndim == 1:
+        out = _consult_decode_attn(q, k, v, valid)
         if out is not None:  # override may decline (e.g. small ring)
             return out
     B, Hq, _, D = q.shape

@@ -512,6 +512,15 @@ class ServeEngine:
         # kernel via kernels.decode_attention.make_kernel_decode_attn);
         # installed at trace time, baked into the compiled scan.
         self.decode_attn = decode_attn
+        # kernel-path accounting: the adapter logs one (hit|decline,
+        # reason) per attention layer at *trace* time (lax.scan traces
+        # its body once), so the first dispatch of each decode key
+        # records the layer decisions and every later dispatch replays
+        # them — counters move per compiled call with zero device work.
+        self._decode_attn_trace: Dict[Any, Tuple] = {}
+        self._decode_kernel_stats: Dict[str, Any] = {
+            "dispatches": 0, "hit_layers": 0,
+            "decline_layers": Counter()}
         self.dispatch_count = 0           # compiled calls, engine lifetime
         self._decode_keys: set = set()    # expected decode executables
         self._stream_keys: set = set()    # expected (geometry, bucket)
@@ -684,6 +693,17 @@ class ServeEngine:
             reg.counter("serve_requests_finished_total",
                         "retired requests by terminal status",
                         status=status)
+        # decode-kernel path counters (ISSUE 8: no more silent decline)
+        # — pre-registered with the adapter's decline vocabulary so the
+        # scrape schema is stable even before the first decode
+        reg.counter("decode_kernel_hit_layers_total",
+                    "attention layers served by the decode kernel, "
+                    "accumulated per compiled decode call")
+        for reason in ("min_len", "mask_rank"):
+            reg.counter("decode_kernel_decline_layers_total",
+                        "attention layers where the kernel adapter "
+                        "declined and dense decode ran instead",
+                        reason=reason)
         # per-layer FA/SA decision counters exist from the first scrape
         # so dashboards see every routed layer, not just the ones the
         # traffic so far happened to exercise
@@ -766,6 +786,58 @@ class ServeEngine:
                 "ServeEngine with telemetry=True (or pass --trace-out "
                 "to launch/serve.py)")
         self.tracer.export(path)
+
+    # -- decode-attention backend (kernel-path accounting) -----------------
+    def _attn_ctx(self):
+        """Context installing the engine's decode-attention backend
+        around one compiled decode call (nullcontext when none is
+        configured).  Every decode site — ``generate`` and the
+        scheduler's pooled tick — must go through this so the ambient
+        override state is consistent with what each executable was
+        traced under."""
+        if self.decode_attn is None:
+            return contextlib.nullcontext()
+        return MD.use_decode_attn(self.decode_attn)
+
+    def _note_decode_dispatch(self, key) -> None:
+        """Account one decode dispatch against the kernel-path
+        counters.  A dispatch that traced (jit cache miss) drains the
+        adapter's trace log — one (hit|decline, reason) entry per
+        attention layer — and records it under ``key``; cached
+        dispatches replay the recorded decisions."""
+        fn = self.decode_attn
+        if fn is None:
+            return
+        st = self._decode_kernel_stats
+        st["dispatches"] += 1
+        if not hasattr(fn, "drain_log"):
+            return  # legacy backend: no per-layer decision log
+        fresh = fn.drain_log()
+        if fresh:
+            self._decode_attn_trace[key] = tuple(fresh)
+        reg = self.telemetry
+        for event, reason in self._decode_attn_trace.get(key, ()):
+            if event == "hit":
+                st["hit_layers"] += 1
+                if reg is not None:
+                    reg.counter("decode_kernel_hit_layers_total").inc()
+            else:
+                st["decline_layers"][reason] += 1
+                if reg is not None:
+                    reg.counter("decode_kernel_decline_layers_total",
+                                reason=reason).inc()
+
+    def decode_kernel_summary(self) -> Dict[str, Any]:
+        """Kernel-path accounting over the engine's lifetime: compiled
+        decode dispatches, and per-layer hit/decline(reason) tallies
+        replayed from the adapters' trace-time decisions."""
+        st = self._decode_kernel_stats
+        return {
+            "installed": self.decode_attn is not None,
+            "dispatches": st["dispatches"],
+            "hit_layers": st["hit_layers"],
+            "decline_layers": dict(st["decline_layers"]),
+        }
 
     # -- jit-cache bookkeeping ---------------------------------------------
     def decode_cache_size(self) -> int:
@@ -1126,12 +1198,10 @@ class ServeEngine:
         rng = rng if rng is not None else jax.random.key(0)
         fa_heads, duo_layers = MD.routing_head_split(cfg, pattern)
         pos = jnp.int32(seq_len)
-        self._decode_keys.add(decode_executable_key(
-            caches, pos, n_steps, greedy, duo_layers, enc_out, rng))
-        attn_ctx = (MD.use_decode_attn(self.decode_attn)
-                    if self.decode_attn is not None
-                    else contextlib.nullcontext())
-        with warnings.catch_warnings(), attn_ctx:
+        dk = decode_executable_key(caches, pos, n_steps, greedy,
+                                   duo_layers, enc_out, rng)
+        self._decode_keys.add(dk)
+        with warnings.catch_warnings(), self._attn_ctx():
             # donation is a no-op on backends without buffer aliasing
             # (CPU tests) — harmless, silence the per-call warning
             warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
@@ -1140,6 +1210,7 @@ class ServeEngine:
                 pos=pos, rng=rng, n_steps=n_steps,
                 greedy=greedy, enc_out=enc_out, fa_heads=fa_heads,
                 duo_layers=duo_layers, unroll=self.decode_unroll)
+        self._note_decode_dispatch(dk)
         dispatches += 1
         self.dispatch_count += dispatches
         self._check_executable_guard()
@@ -1245,6 +1316,7 @@ class ServeEngine:
             "prefix_host_bytes": stats.prefix_host_bytes,
             "prefix_store": (self.prefix_store.stats()
                              if self.prefix_store is not None else None),
+            "decode_kernel": self.decode_kernel_summary(),
         }
 
 

@@ -50,6 +50,7 @@ on the decode path is row-independent.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -632,14 +633,21 @@ class ContinuousScheduler:
             if not pool.active:
                 continue
             t_decode = self.clock() if tm_on else 0.0
-            eng._decode_keys.add(decode_executable_key(
-                pool.caches, pool.pos, self.chunk, True, None, None,
-                self._rng))
-            toks, logits, caches = eng._decode_many(
-                params=eng.params, logits=pool.logits, caches=pool.caches,
-                pos=pool.pos, rng=self._rng, n_steps=self.chunk,
-                greedy=True, enc_out=None, fa_heads=None, duo_layers=None,
-                unroll=eng.decode_unroll)
+            dk = decode_executable_key(pool.caches, pool.pos, self.chunk,
+                                       True, None, None, self._rng)
+            eng._decode_keys.add(dk)
+            with warnings.catch_warnings(), eng._attn_ctx():
+                # install the engine's decode backend for the pooled
+                # scan, same trace-time protocol as ``generate``;
+                # donation warnings are CPU-backend noise
+                warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+                toks, logits, caches = eng._decode_many(
+                    params=eng.params, logits=pool.logits,
+                    caches=pool.caches, pos=pool.pos, rng=self._rng,
+                    n_steps=self.chunk, greedy=True, enc_out=None,
+                    fa_heads=None, duo_layers=None,
+                    unroll=eng.decode_unroll)
+            eng._note_decode_dispatch(dk)
             eng.dispatch_count += 1
             pool.logits, pool.caches = logits, caches
             pool.advance(self.chunk)
