@@ -1,0 +1,151 @@
+"""Bench regression gate: fresh BENCH_*.json vs committed baselines.
+
+    python benchmarks/check_regression.py            # gate (CI step)
+    python benchmarks/check_regression.py --update   # re-baseline
+
+Compares every ``BENCH_*.json`` under ``benchmarks/baselines/`` against
+the same-named fresh artifact under ``artifacts/bench/`` (written by
+the bench smokes that just ran).  Two metric families are gated, found
+by key name anywhere in the JSON tree:
+
+  * ``tokens_per_sec``  — throughput, regression = (base - fresh)/base
+  * ``ttft_p50_s``      — p50 time-to-first-token, regression =
+                          (fresh - base)/base
+
+Thresholds: a regression past ``--warn`` (default 10%) prints a WARN
+line; past ``--fail`` (default 25%) the gate exits 1.  Improvements
+and sub-warn drift print as ok.  Baselines are recorded on the same
+class of runner the gate runs on (CI smoke shapes) — the generous fail
+bar absorbs shared-runner noise while still catching the 2× cliffs a
+scheduling or dispatch regression causes.
+
+Coverage is explicit, never silent: baseline files with no fresh
+artifact (bench didn't run) and fresh artifacts with no baseline
+(not yet gated) are listed in the output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Tuple
+
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+BASELINE_DIR = os.path.join(BENCH_DIR, "baselines")
+FRESH_DIR = os.path.join(BENCH_DIR, "..", "artifacts", "bench")
+
+# key → direction: +1 means higher-is-better (regression when fresh
+# drops), -1 means lower-is-better (regression when fresh rises)
+GATED_METRICS = {"tokens_per_sec": +1, "ttft_p50_s": -1}
+
+
+def _flatten(node, prefix: str = "") -> Dict[str, float]:
+    """{json-path: value} for every gated numeric leaf under ``node``."""
+    out: Dict[str, float] = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            path = f"{prefix}.{k}" if prefix else k
+            if k in GATED_METRICS and isinstance(v, (int, float)):
+                out[path] = float(v)
+            else:
+                out.update(_flatten(v, path))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            out.update(_flatten(v, f"{prefix}[{i}]"))
+    return out
+
+
+def compare(base: Dict, fresh: Dict, *, warn: float,
+            fail: float) -> Tuple[List[str], List[str], List[str]]:
+    """(ok, warned, failed) report lines for one baseline/fresh pair."""
+    ok, warned, failed = [], [], []
+    b, f = _flatten(base), _flatten(fresh)
+    for path in sorted(b):
+        if path not in f:
+            warned.append(f"WARN {path}: in baseline but not in fresh "
+                          f"artifact (metric renamed or leg dropped?)")
+            continue
+        key = path.rsplit(".", 1)[-1]
+        sign = GATED_METRICS[key]
+        bv, fv = b[path], f[path]
+        if bv == 0 or not (bv == bv and fv == fv):  # zero or NaN base
+            ok.append(f"ok   {path}: baseline={bv:g} fresh={fv:g} "
+                      f"(not comparable, skipped)")
+            continue
+        reg = sign * (bv - fv) / abs(bv)
+        line = (f"{path}: baseline={bv:.4g} fresh={fv:.4g} "
+                f"regression={reg:+.1%}")
+        if reg >= fail:
+            failed.append(f"FAIL {line} (>= {fail:.0%})")
+        elif reg >= warn:
+            warned.append(f"WARN {line} (>= {warn:.0%})")
+        else:
+            ok.append(f"ok   {line}")
+    return ok, warned, failed
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--fresh-dir", default=FRESH_DIR)
+    ap.add_argument("--warn", type=float, default=0.10)
+    ap.add_argument("--fail", type=float, default=0.25)
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh artifacts over the committed "
+                         "baselines instead of gating")
+    args = ap.parse_args()
+    if not (0 <= args.warn <= args.fail):
+        ap.error(f"need 0 <= --warn ({args.warn}) <= --fail ({args.fail})")
+
+    if args.update:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        names = sorted(n for n in os.listdir(args.fresh_dir)
+                       if n.startswith("BENCH_") and n.endswith(".json"))
+        for name in names:
+            shutil.copy(os.path.join(args.fresh_dir, name),
+                        os.path.join(args.baseline_dir, name))
+            print(f"baselined {name}")
+        return 0
+
+    if not os.path.isdir(args.baseline_dir):
+        print(f"no baseline dir at {args.baseline_dir} — nothing gated "
+              f"(run with --update after a bench pass to create it)")
+        return 0
+    baselines = sorted(n for n in os.listdir(args.baseline_dir)
+                       if n.startswith("BENCH_") and n.endswith(".json"))
+    fresh_names = (sorted(n for n in os.listdir(args.fresh_dir)
+                          if n.startswith("BENCH_")
+                          and n.endswith(".json"))
+                   if os.path.isdir(args.fresh_dir) else [])
+    any_failed = False
+    for name in baselines:
+        fresh_path = os.path.join(args.fresh_dir, name)
+        if not os.path.exists(fresh_path):
+            print(f"SKIP {name}: baseline committed but no fresh "
+                  f"artifact — the bench that writes it did not run")
+            continue
+        base = json.load(open(os.path.join(args.baseline_dir, name)))
+        fresh = json.load(open(fresh_path))
+        ok, warned, failed = compare(base.get("results", base),
+                                     fresh.get("results", fresh),
+                                     warn=args.warn, fail=args.fail)
+        print(f"== {name}: {len(ok)} ok, {len(warned)} warn, "
+              f"{len(failed)} fail")
+        for line in ok + warned + failed:
+            print(f"   {line}")
+        any_failed = any_failed or bool(failed)
+    for name in fresh_names:
+        if name not in baselines:
+            print(f"note {name}: fresh artifact has no committed "
+                  f"baseline — not gated")
+    if any_failed:
+        print(f"regression gate FAILED (fail bar {args.fail:.0%})")
+        return 1
+    print("regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

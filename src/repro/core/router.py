@@ -10,6 +10,7 @@ Gumbel relaxation is numerically touchy in bf16.
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -166,3 +167,61 @@ def anneal_tau(flux: FluxConfig, step, total_steps: int) -> jax.Array:
     """Linear temperature decay (paper §3.1)."""
     frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
     return flux.tau_start + (flux.tau_end - flux.tau_start) * frac
+
+
+class MarginDriftTracker:
+    """Decision-margin drift over the request stream, keyed by
+    (layer, sa_level) rung.
+
+    Pure-host bookkeeping (no jax): the serving engine feeds it the
+    same per-layer ``decision_margin`` floats it already observes into
+    the margin histograms.  Per key it keeps a Welford lifetime mean
+    and a bounded window of recent margins; **drift** is
+    ``recent_mean − lifetime_mean`` — positive drift at a rung means
+    the router has been deciding more FA-ward than it historically did
+    there, i.e. the traffic mix shifted under a fixed dial setting.
+    That is the early-warning signal the load-adaptive sparsity dial
+    needs before a rung change starts flipping layers (DESIGN.md
+    §Observability)."""
+
+    __slots__ = ("window", "_stats")
+
+    def __init__(self, window: int = 256):
+        if window < 1:
+            raise ValueError(
+                f"MarginDriftTracker: window={window} must be >= 1")
+        self.window = int(window)
+        # (layer, sa_level) -> [count, lifetime_mean, recent deque]
+        self._stats: Dict[Tuple[int, int], list] = {}
+
+    def observe(self, layer: int, sa_level: int, margin: float) -> None:
+        key = (int(layer), int(sa_level))
+        st = self._stats.get(key)
+        if st is None:
+            st = self._stats[key] = [0, 0.0, deque(maxlen=self.window)]
+        st[0] += 1
+        st[1] += (float(margin) - st[1]) / st[0]  # Welford mean
+        st[2].append(float(margin))
+
+    def drift(self, layer: int, sa_level: int) -> float:
+        st = self._stats.get((int(layer), int(sa_level)))
+        if st is None or not st[2]:
+            return 0.0
+        return sum(st[2]) / len(st[2]) - st[1]
+
+    def keys(self) -> Tuple[Tuple[int, int], ...]:
+        return tuple(sorted(self._stats))
+
+    def report(self) -> Dict[str, Dict[str, float]]:
+        """{"layer:level": {count, lifetime_mean, recent_mean, drift}}
+        — JSON-ready for the drain summary / ledger report."""
+        out: Dict[str, Dict[str, float]] = {}
+        for (layer, level), st in sorted(self._stats.items()):
+            recent = (sum(st[2]) / len(st[2])) if st[2] else 0.0
+            out[f"{layer}:{level}"] = {
+                "count": float(st[0]),
+                "lifetime_mean": st[1],
+                "recent_mean": recent,
+                "drift": recent - st[1],
+            }
+        return out

@@ -309,6 +309,62 @@ def pooled_decode_attn_cost(lengths: List[int], buffer_len: int, *,
     }
 
 
+def decode_linear_cost(n_params: int, params_bytes: int, *,
+                       batch: int, n_steps: int = 1) -> Dict[str, float]:
+    """Expressed non-attention cost of pooled decode: every step runs
+    the full parameter set once per batch row (2·N FLOPs per token)
+    and streams the params from HBM once per step (the batch shares
+    one read — decode is famously parameter-bandwidth-bound)."""
+    return {
+        "flops": 2.0 * float(n_params) * batch * n_steps,
+        "hbm_bytes": float(params_bytes) * n_steps,
+    }
+
+
+def pooled_decode_tick_cost(lengths: List[int],
+                            layer_specs: List[Tuple],
+                            *, n_steps: int = 1,
+                            kernel_hits: Optional[List[bool]] = None,
+                            block_k: int = 128) -> Dict:
+    """Expressed attention cost of one pooled decode tick across all
+    attention layers — the join the serving profiler uses.
+
+    ``layer_specs`` holds one (buffer_len, n_q_heads, n_kv_heads, d_k,
+    d_v, dtype_bytes) tuple per attention layer (the engine derives
+    them from static cache shapes); ``kernel_hits[i]`` selects the
+    kernel column (live-length block trips) for layers the decode
+    kernel served and the dense column (full buffer sweep) for
+    declined/dense layers — None means all-dense.  Returns totals plus
+    the kernel-hit / kernel-decline split, each scaled by ``n_steps``.
+    """
+    if kernel_hits is None:
+        kernel_hits = [False] * len(layer_specs)
+    if len(kernel_hits) != len(layer_specs):
+        raise ValueError(
+            f"pooled_decode_tick_cost: {len(kernel_hits)} kernel_hits "
+            f"for {len(layer_specs)} layer specs — the kernel trace and "
+            f"the geometry specs must describe the same layers")
+    out: Dict = {
+        "flops": 0.0, "hbm_bytes": 0.0,
+        "kernel_hit": {"layers": 0, "flops": 0.0, "hbm_bytes": 0.0},
+        "kernel_decline": {"layers": 0, "flops": 0.0, "hbm_bytes": 0.0},
+    }
+    for (buf, hq, hkv, dk, dv, db), hit in zip(layer_specs, kernel_hits):
+        c = pooled_decode_attn_cost(lengths, buf, n_q_heads=hq,
+                                    n_kv_heads=hkv, d_k=dk, d_v=dv,
+                                    block_k=block_k, dtype_bytes=db)
+        fl = (c["kernel_flops"] if hit else c["dense_flops"]) * n_steps
+        hb = (c["kernel_hbm_bytes"] if hit
+              else c["dense_hbm_bytes"]) * n_steps
+        out["flops"] += fl
+        out["hbm_bytes"] += hb
+        side = out["kernel_hit" if hit else "kernel_decline"]
+        side["layers"] += n_steps  # layer-consults: layers × steps
+        side["flops"] += fl
+        side["hbm_bytes"] += hb
+    return out
+
+
 def pooled_decode_report(cfg, *, max_len: int, batch: int = 8,
                          block_k: int = 128, dtype_bytes: int = 4,
                          fracs=(0.125, 0.25, 0.5, 0.75, 1.0)) -> Dict:

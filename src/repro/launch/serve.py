@@ -15,6 +15,7 @@
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -78,12 +79,22 @@ def _serve_continuous(engine: ServeEngine, reqs, args) -> None:
         done[f.rid] = f
     wall = time.monotonic() - t0
     total = 0
+    probes = engine.fidelity_probe_every > 0
     for rid in sorted(done):
         f, m = done[rid], done[rid].metrics
         total += m.n_generated
+        # routing-fidelity columns only when probing was enabled: mean
+        # attention-mass coverage + the worst SA-layer coverage for the
+        # sampled admissions, '-' for the unsampled rest
+        fid = ""
+        if probes:
+            fid = (f" cov={m.fidelity:.3f}" if m.fidelity is not None
+                   else " cov=    -")
+            fid += (f" sa_min={m.fidelity_sa_min:.3f}"
+                    if m.fidelity_sa_min is not None else " sa_min=    -")
         print(f"req {rid} [{f.status:>9}]: {f.tokens[:8].tolist()} ... | "
               f"ttft={m.ttft * 1e3:6.1f}ms queue={m.queue_delay * 1e3:5.1f}ms "
-              f"tps={m.decode_tps:6.1f} preempt={m.preemptions}")
+              f"tps={m.decode_tps:6.1f} preempt={m.preemptions}{fid}")
     by_status = {}
     for f in done.values():
         by_status[f.status] = by_status.get(f.status, 0) + 1
@@ -156,6 +167,36 @@ def _write_telemetry(engine: ServeEngine, args) -> None:
         engine.export_trace(args.trace_out)
         print(f"trace   → {args.trace_out} "
               f"(open in https://ui.perfetto.dev)")
+    if args.profile_every:
+        rep = engine.profiler_report()
+        print(f"profiler: {rep['sampled_ticks']} sampled ticks "
+              f"(every {rep['every']})")
+        for ph in rep["phases"]:
+            print(f"  {ph['phase']:>14}: host={ph['host_s'] * 1e3:8.2f}ms "
+                  f"device={ph['device_s'] * 1e3:8.2f}ms "
+                  f"({ph['host_frac']:.0%} host) "
+                  f"achieved={ph['achieved_gflops_per_s']:7.1f} GFLOP/s "
+                  f"{ph['achieved_gbytes_per_s']:6.1f} GB/s "
+                  f"n={ph['count']}")
+    if args.ledger_out:
+        rep = engine.attribution_report()
+        led = rep["ledger"]
+        with open(args.ledger_out, "w") as f:
+            json.dump(rep, f, indent=2)
+        recon, snap = led["reconciliation"], led["snapshot"]
+        if snap is None:
+            # batch-synchronous path: no scheduler ticked, so the ledger
+            # never snapshotted — the report still carries kv_cache_stats
+            print(f"ledger  → {args.ledger_out} (no tick snapshots; "
+                  f"use --continuous for the per-tick ledger)")
+        else:
+            print(f"ledger  → {args.ledger_out} | "
+                  f"device={snap['device_bytes']} B "
+                  f"hwm={snap['device_high_watermark_bytes']} B "
+                  f"frag={snap['fragmentation_bytes']} B | "
+                  f"reconciliation payload_delta={recon['payload_delta']} "
+                  f"overhead_delta={recon['overhead_delta']} "
+                  f"(aux={led['aux_bytes']})")
 
 
 def main() -> None:
@@ -233,6 +274,18 @@ def main() -> None:
                     help="write the request-span Chrome-trace/Perfetto "
                          "JSON here (enables engine telemetry; open in "
                          "https://ui.perfetto.dev)")
+    # cost attribution (DESIGN.md §Observability); all off by default
+    ap.add_argument("--profile-every", type=int, default=0,
+                    help="sample every Nth scheduler tick for the "
+                         "host/device cost profiler (adds sync "
+                         "boundaries ONLY on sampled ticks; 0 = off)")
+    ap.add_argument("--fidelity-probe-every", type=int, default=0,
+                    help="probe every Nth admission's attention-mass "
+                         "coverage per routed layer (0 = off)")
+    ap.add_argument("--ledger-out", default=None,
+                    help="enable the device-memory ledger and write its "
+                         "reconciled JSON report (with the profiler "
+                         "table when --profile-every is set) here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -260,7 +313,10 @@ def main() -> None:
                          prefill_chunk=args.prefill_chunk or None,
                          prefix_cache_mb=args.prefix_cache_mb or None,
                          prefix_cache_host_mb=args.prefix_cache_host_mb,
-                         slo=slo, telemetry=telemetry)
+                         slo=slo, telemetry=telemetry,
+                         profile_every=args.profile_every,
+                         fidelity_probe_every=args.fidelity_probe_every,
+                         memory_ledger=bool(args.ledger_out))
     if args.continuous:
         _serve_continuous(engine, reqs, args)
         _print_kernel_summary(engine)

@@ -1058,3 +1058,84 @@ def capture_hidden(params, cfg: ModelConfig, tokens: jax.Array,
     xs = (jnp.arange(n_periods(cfg)), params["trunk"])
     _, snaps = lax.scan(body, h, xs)  # (n_periods, P, B, S, d)
     return snaps.reshape(cfg.num_layers, *snaps.shape[2:])
+
+
+def attention_mass_coverage(params, cfg: ModelConfig, tokens: jax.Array,
+                            *, length=None, prefix_embeddings=None,
+                            encoder_frames=None) -> jax.Array:
+    """Per-routed-layer FA attention-mass retained by the SA window —
+    the serving stack's routing-fidelity probe (DESIGN.md
+    §Observability).
+
+    Runs an FA-only forward and, at every routed layer, asks: of the
+    full-attention softmax mass the *last* live query spreads over the
+    prefix, what fraction lands on keys the SA mode would have kept?
+    1.0 means routing this layer to SA loses nothing for the next
+    decoded token; low coverage means the router is trading real
+    attention mass away.  Exact for the streaming (ssa) mode; for
+    triangle the last query sits in the dense tail chunk so coverage is
+    exactly 1; for block_topk the sink+local window is a conservative
+    lower bound (the selector keeps at least the forced sink/diagonal
+    blocks).
+
+    ``tokens`` may be padded past the real prompt: ``length`` (a
+    *traced* scalar) marks the live prefix, and causal masking makes
+    the padded forward exact for positions < length — the engine pads
+    probe prompts to a power-of-two bucket so probing adds O(log
+    max_len) executables, not one per prompt length.
+
+    Returns (n_routed,) float32 in ``cfg.routable_layers()`` order.
+    """
+    enc_out = (encode(params, cfg, encoder_frames)
+               if cfg.num_encoder_layers else None)
+    h = embed_tokens(params, cfg, tokens, prefix_embeddings)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    P = period_len(cfg)
+    if not any(is_routed(cfg, pos) for pos in range(P)):
+        return jnp.zeros((0,), jnp.float32)
+    length = jnp.asarray(S if length is None else length, jnp.int32)
+    q_idx = length - 1
+    sa = sa_mode(cfg)
+    kv_pos = jnp.arange(S)
+    live = kv_pos < length
+    if sa.kind == "triangle":
+        vis = live  # dense tail chunk: the last query sees everything
+    else:
+        vis = live & ((kv_pos < sa.sink) | (q_idx - kv_pos < sa.local))
+
+    def body(carry, xs):
+        h = carry
+        _, trunk_slice = xs
+        covs = []
+        for pos in range(P):
+            bp = trunk_slice[pos]
+            if is_routed(cfg, pos):
+                # duplicate the (cheap) qk projection rather than thread
+                # probe plumbing through block_apply's cache contract
+                x = rms_norm(bp["norm1"], h, cfg.norm_eps)
+                if cfg.use_mla:
+                    ckv, kr = A.mla_latent(bp["attn"], cfg, x, positions)
+                    q, _ = A.mla_q(bp["attn"], cfg, x, positions)
+                    k, _ = A.mla_expand_kv(bp["attn"], cfg, ckv, kr)
+                else:
+                    q, k, _, _ = A.gqa_qkv(bp["attn"], cfg, x, positions)
+                    G = q.shape[1] // k.shape[1]
+                    if G > 1:  # kv-major head order, as in M._gqa_view
+                        k = jnp.repeat(k, G, axis=1)
+                q_last = jnp.take(q, q_idx, axis=2)  # (B, H, D)
+                s = jnp.einsum("bhd,bhsd->bhs", q_last, k,
+                               preferred_element_type=jnp.float32)
+                s = s * (q.shape[-1] ** -0.5)
+                s = jnp.where(live[None, None, :], s, M.NEG_INF)
+                p = jax.nn.softmax(s, axis=-1)
+                covs.append(jnp.mean(
+                    jnp.sum(jnp.where(vis[None, None, :], p, 0.0),
+                            axis=-1)))
+            h, _, _, _ = block_apply(bp, cfg, pos, h, positions,
+                                     ("fa_only",), enc_out=enc_out)
+        return h, jnp.stack(covs)
+
+    xs = (jnp.arange(n_periods(cfg)), params["trunk"])
+    _, covs = lax.scan(body, h, xs)  # (n_periods, n_routed_per_period)
+    return covs.reshape(-1)

@@ -44,6 +44,7 @@ from repro.configs.base import ModelConfig
 # whose package chain loads repro.serve — a name import here would trip
 # that cycle at interpreter start
 from repro.core import router as RT
+from repro.launch import hlo_costs as HL
 from repro.models import model as MD
 from repro.serve import kv_cache as KC
 from repro.serve import prefix_cache as PXC
@@ -465,7 +466,10 @@ class ServeEngine:
                  prefix_cache_host_mb: float = 0.0,
                  slo: Optional[SLO.SLOConfig] = None,
                  telemetry: bool = False,
-                 flight_recorder_ticks: int = 512):
+                 flight_recorder_ticks: int = 512,
+                 profile_every: int = 0,
+                 fidelity_probe_every: int = 0,
+                 memory_ledger: bool = False):
         if routing_pooling not in ("prefix", "prefix_suffix"):
             raise ValueError(
                 f"routing_pooling={routing_pooling!r}: expected 'prefix' "
@@ -490,6 +494,28 @@ class ServeEngine:
         # argmax routing) unless a scheduler's LoadTracker turns it.
         self.slo = slo if slo is not None else SLO.SLOConfig()
         self.sa_level = 0
+        # attribution layer (DESIGN.md §Observability): sampled cost
+        # profiler, routing-fidelity probes and the memory ledger.  All
+        # default off; any of them implies the telemetry surfaces exist
+        # since they export through the registry/flight recorder.
+        if profile_every < 0 or fidelity_probe_every < 0:
+            raise ValueError(
+                f"profile_every={profile_every} / fidelity_probe_every="
+                f"{fidelity_probe_every} must be >= 0 (0 disables)")
+        self.profiler = (TM.TickProfiler(profile_every)
+                         if profile_every else None)
+        self.fidelity_probe_every = int(fidelity_probe_every)
+        self._probe_admissions = 0    # admissions seen by the probe dial
+        self._params_cost_cache: Optional[Tuple[int, int]] = None
+        telemetry = bool(telemetry or profile_every
+                         or fidelity_probe_every or memory_ledger)
+        # decision-margin drift per (layer, sa_level) rung: pure-host
+        # Welford bookkeeping fed by _record_routing, so it rides any
+        # telemetry-enabled engine for free
+        self.margin_drift = (RT.MarginDriftTracker()
+                             if telemetry else None)
+        self.ledger = (TM.MemoryLedger(params_bytes=self._params_cost()[1])
+                       if memory_ledger else None)
         # serving telemetry (DESIGN.md §Observability): a metrics
         # registry, a request-span tracer and a per-tick flight
         # recorder — all host-side.  Disabled (None) by default: the
@@ -558,6 +584,20 @@ class ServeEngine:
         self._snap_skip_warned: set = set()
         self._encode = (jax.jit(partial(MD.encode, cfg=cfg))
                         if cfg.num_encoder_layers else None)
+        # routing-fidelity probe: FA attention-mass coverage of the
+        # routed SA window (MD.attention_mass_coverage), one jitted
+        # sweep per power-of-two prompt bucket — ``length`` is traced,
+        # so the probe jit cache stays O(log max_len), guard-counted
+        # like every other serving-path jit.  Constructing the jit
+        # wrapper compiles nothing; with the probe dial at 0 this cache
+        # stays empty (asserted by the off-path tests).
+        self._coverage = jax.jit(partial(MD.attention_mass_coverage,
+                                         cfg=cfg))
+        self._probe_keys: set = set()     # expected probe prompt buckets
+        # per-geometry expressed-cost specs for the profiler's analytic
+        # join (launch/hlo_costs) — derived once per pool from static
+        # cache shapes, never from device reads
+        self._cost_specs: Dict[Tuple, List[Tuple]] = {}
 
     def _build_prefix_store(self, prefix_cache_mb,
                             prefix_cache_host_mb) -> Optional[PXC.PrefixStore]:
@@ -712,6 +752,18 @@ class ServeEngine:
                 reg.counter("flux_router_decisions_total",
                             "hard routing decisions at admission time",
                             layer=str(i), decision=d)
+        # fidelity probes opt in per engine; pre-register their
+        # histograms so the scrape schema is stable before the first
+        # probe admission fires
+        if self.fidelity_probe_every:
+            for i in self.cfg.routable_layers():
+                for d in ("fa", "sa"):
+                    reg.histogram(
+                        "flux_fidelity_coverage",
+                        "fraction of the full-attention mass of the last "
+                        "prompt token retained by the routed SA window, "
+                        "per routed layer (probe admissions only)",
+                        layer=str(i), decision=d)
         if self.prefix_store is not None:
             self.prefix_store.on_event = self._prefix_store_event
 
@@ -738,14 +790,20 @@ class ServeEngine:
             reg.counter("flux_router_decisions_total",
                         layer=str(i), decision=d).inc()
             if p_fa is not None and j < len(p_fa):
+                margin = RT.decision_margin(
+                    float(p_fa[j]), sa_level,
+                    step=self.slo.sa_threshold_step,
+                    max_level=self.slo.sa_level_max)
                 reg.histogram(
                     "flux_router_margin",
                     "router p_fa minus the (possibly SA-biased) decision "
                     "threshold; positive = FA side",
-                    layer=str(i)).observe(RT.decision_margin(
-                        float(p_fa[j]), sa_level,
-                        step=self.slo.sa_threshold_step,
-                        max_level=self.slo.sa_level_max))
+                    layer=str(i)).observe(margin)
+                if self.margin_drift is not None:
+                    # same already-materialized host float — drift
+                    # tracking is keyed by the admission's rung, so the
+                    # sparsity dial gets per-rung traffic-shift signals
+                    self.margin_drift.observe(i, sa_level, margin)
 
     def _refresh_gauges(self) -> None:
         """Point-in-time gauges from host state (scheduler occupancy,
@@ -766,6 +824,35 @@ class ServeEngine:
             reg.gauge("serve_slots_active").set(sched.n_active())
             reg.gauge("serve_slots_capacity").set(
                 sum(p.capacity for p in sched.pools.values()))
+        md = self.margin_drift
+        if md is not None:
+            for layer, level in md.keys():
+                reg.gauge(
+                    "flux_router_margin_drift",
+                    "recent-minus-lifetime mean router decision margin, "
+                    "per (layer, sparsity rung) — nonzero means the "
+                    "traffic mix shifted under a fixed dial setting",
+                    layer=str(layer), sa_level=str(level)).set(
+                        md.drift(layer, level))
+        led = self.ledger
+        snap = led.last() if led is not None else None
+        if snap is not None:
+            reg.gauge("serve_ledger_device_bytes",
+                      "memory ledger: tracked device bytes (pools + "
+                      "prefix device tier + params)").set(snap.device_bytes)
+            reg.gauge("serve_ledger_pool_live_bytes",
+                      "memory ledger: payload bytes in occupied slots"
+                      ).set(snap.pool_live_bytes)
+            reg.gauge("serve_ledger_pool_stranded_bytes",
+                      "memory ledger: payload bytes in empty slots"
+                      ).set(snap.pool_stranded_bytes)
+            reg.gauge("serve_ledger_fragmentation_bytes",
+                      "memory ledger: empty-slot bytes in pools whose "
+                      "geometry matches no queued work").set(
+                          snap.fragmentation_bytes)
+            reg.gauge("serve_ledger_device_high_watermark_bytes",
+                      "memory ledger: lifetime peak of tracked device "
+                      "bytes").set(led.high_watermark)
 
     def metrics_text(self) -> str:
         """Current metrics as Prometheus text exposition format."""
@@ -839,6 +926,185 @@ class ServeEngine:
             "decline_layers": dict(st["decline_layers"]),
         }
 
+    # -- cost attribution (profiler / ledger / probes) ----------------------
+    def _params_cost(self) -> Tuple[int, int]:
+        """(parameter count, parameter bytes) — shape metadata only,
+        walked once and cached (the analytic linear-cost term and the
+        ledger's params line both read it)."""
+        pc = self._params_cost_cache
+        if pc is None:
+            leaves = jax.tree_util.tree_leaves(self.params)
+            pc = self._params_cost_cache = (
+                int(sum(l.size for l in leaves)),
+                int(sum(l.size * l.dtype.itemsize for l in leaves)))
+        return pc
+
+    def device_sync(self, *trees) -> None:
+        """Timed sync boundary for the profiler's sampled tick path:
+        block until every array in ``trees`` is ready.  ONLY sampled
+        ticks may call this — the unsampled path must stay sync-free
+        (DESIGN.md §Observability sampling rules)."""
+        jax.block_until_ready([t for t in trees if t is not None])
+
+    def _pool_layer_specs(self, pool) -> List[Tuple]:
+        """Per-attention-layer (buffer_len, n_q_heads, n_kv_heads, d_k,
+        d_v, dtype_bytes) specs for one slot pool, from static cache
+        shapes — the geometry half of the hlo_costs expressed-cost
+        join.  Cached per slot geometry."""
+        key = pool.slot_geometry()
+        specs = self._cost_specs.get(key)
+        if specs is None:
+            hq = self.cfg.num_heads
+            specs = []
+            for c in pool.caches:
+                if isinstance(c, KC.MambaCache):
+                    continue
+                if isinstance(c, (KC.LatentKV, KC.RingLatentKV)):
+                    # absorbed MLA decode: one latent "kv head", scores
+                    # over ckv+rope, values read from the latent
+                    specs.append((c.ckv.shape[1], hq, 1,
+                                  c.ckv.shape[-1] + c.kr.shape[-1],
+                                  c.ckv.shape[-1], c.ckv.dtype.itemsize))
+                else:  # FullKV / RingKV: k is (slots, Hkv, L, D)
+                    specs.append((c.k.shape[2], hq, c.k.shape[1],
+                                  c.k.shape[-1], c.v.shape[-1],
+                                  c.k.dtype.itemsize))
+            self._cost_specs[key] = specs
+        return specs
+
+    def _expressed_decode_cost(self, pool, dk_key, n_steps: int
+                               ) -> Dict[str, Any]:
+        """Analytic expressed FLOPs/HBM bytes for ``n_steps`` pooled
+        decode steps on ``pool`` (hlo_costs counting conventions),
+        joined with the kernel-path trace for ``dk_key`` so kernel-hit
+        layers cost their live-length block trips and declined/dense
+        layers cost the full buffer sweep.  Host arithmetic over static
+        shapes and host-known lengths — never a device read."""
+        specs = self._pool_layer_specs(pool)
+        lengths = [1] * pool.capacity  # free rows park at position 0
+        for slot, inf in pool.active.items():
+            lengths[slot] = max(
+                1, inf.metrics.prompt_len + len(inf.generated))
+        trace = self._decode_attn_trace.get(dk_key, ())
+        hits = ([e == "hit" for e, _ in trace]
+                if len(trace) == len(specs) else None)
+        attn = HL.pooled_decode_tick_cost(lengths, specs,
+                                          n_steps=n_steps,
+                                          kernel_hits=hits)
+        n_params, params_bytes = self._params_cost()
+        lin = HL.decode_linear_cost(n_params, params_bytes,
+                                    batch=pool.capacity, n_steps=n_steps)
+        return {
+            "flops": attn["flops"] + lin["flops"],
+            "hbm_bytes": attn["hbm_bytes"] + lin["hbm_bytes"],
+            "kernel_hit": attn["kernel_hit"],
+            "kernel_decline": attn["kernel_decline"],
+        }
+
+    def _maybe_fidelity_probe(self, tokens_1d, pattern
+                              ) -> Optional[np.ndarray]:
+        """Every ``fidelity_probe_every``-th admission becomes a probe
+        request: one extra jitted sweep (MD.attention_mass_coverage)
+        measures, per routed layer, the fraction of the FA attention
+        mass of the last prompt token that the routed SA window
+        retains.  The prompt pads to its power-of-two bucket with a
+        traced true length — bitwise-identical coverage to the unpadded
+        form, and O(log max_len) probe executables.  Probe admissions
+        pay one dispatch plus a host sync; with the dial at 0 this
+        method is a single int test."""
+        if not self.fidelity_probe_every:
+            return None
+        self._probe_admissions += 1
+        if (self._probe_admissions - 1) % self.fidelity_probe_every:
+            return None
+        routed = self.cfg.routable_layers()
+        if not routed:
+            return None
+        toks = np.asarray(tokens_1d).reshape(-1)
+        S = int(toks.size)
+        if S < 1:
+            return None
+        bucket = 1 if S <= 1 else 1 << (S - 1).bit_length()
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :S] = toks.astype(np.int32)
+        self._probe_keys.add(bucket)
+        cov = self._coverage(self.params, tokens=jnp.asarray(padded),
+                             length=jnp.int32(S))
+        self.dispatch_count += 1
+        cov = np.asarray(cov)
+        reg = self.telemetry
+        if reg is not None:
+            for j, i in enumerate(routed):
+                if j < cov.size and pattern[i] in ("fa", "sa"):
+                    reg.histogram("flux_fidelity_coverage",
+                                  layer=str(i),
+                                  decision=pattern[i]).observe(
+                                      float(cov[j]))
+        return cov
+
+    def ledger_report(self) -> Dict[str, Any]:
+        """Fresh memory-ledger snapshot reconciled against an
+        independent ``kv_cache_stats`` walk of the same pools + prefix
+        store.  Pool payload and prefix tiers must agree exactly; the
+        ledger's overhead exceeds kv_cache_stats by exactly the
+        pool-level aux buffers (logits/pos) the cache walk never sees —
+        ``reconciliation`` carries the deltas so callers can assert."""
+        if self.ledger is None:
+            raise ValueError(
+                "ledger_report: the memory ledger is disabled — construct "
+                "the ServeEngine with memory_ledger=True (or pass "
+                "--ledger-out to launch/serve.py)")
+        sched = self._scheduler
+        snap = (sched.ledger_snapshot() if sched is not None
+                else self.ledger.last())
+        pools = list(sched.pools.values()) if sched is not None else []
+        stats = kv_cache_stats([p.caches for p in pools],
+                               self.prefix_store)
+        out: Dict[str, Any] = {
+            "snapshot": snap.as_dict() if snap is not None else None,
+            "kv_cache_stats": {
+                "payload_bytes": stats.payload_bytes,
+                "overhead_bytes": stats.overhead_bytes,
+                "prefix_device_bytes": stats.prefix_device_bytes,
+                "prefix_host_bytes": stats.prefix_host_bytes,
+            },
+            "reconciliation": None,
+            "aux_bytes": 0,
+        }
+        if snap is not None:
+            out["reconciliation"] = snap.reconcile(
+                stats.payload_bytes, stats.overhead_bytes,
+                stats.prefix_device_bytes, stats.prefix_host_bytes)
+            out["aux_bytes"] = sum(p.aux_bytes for p in snap.pools)
+        if self.prefix_store is not None:
+            out["prefix_store"] = self.prefix_store.stats().as_dict()
+        return out
+
+    def profiler_report(self) -> Dict[str, Any]:
+        """The sampled cost profiler's achieved-vs-expressed table."""
+        if self.profiler is None:
+            raise ValueError(
+                "profiler_report: the tick profiler is disabled — "
+                "construct the ServeEngine with profile_every=N (or pass "
+                "--profile-every to launch/serve.py)")
+        return self.profiler.report()
+
+    def attribution_report(self) -> Dict[str, Any]:
+        """Everything the attribution layer knows, JSON-ready: the
+        profiler table, the reconciled ledger, decision-margin drift
+        and kernel-path accounting.  Disabled parts report None."""
+        return {
+            "profiler": (self.profiler.report()
+                         if self.profiler is not None else None),
+            "ledger": (self.ledger_report()
+                       if self.ledger is not None else None),
+            "margin_drift": (self.margin_drift.report()
+                             if self.margin_drift is not None else None),
+            "decode_kernel": self.decode_kernel_summary(),
+            "fidelity_probe_every": self.fidelity_probe_every,
+            "probe_admissions": self._probe_admissions,
+        }
+
     # -- jit-cache bookkeeping ---------------------------------------------
     def decode_cache_size(self) -> int:
         """Number of compiled decode executables held by this engine."""
@@ -884,6 +1150,14 @@ class ServeEngine:
                 f"(publication and restore of one geometry share an "
                 f"executable); something pattern- or length-shaped has "
                 f"leaked into its signature")
+        compiled = self._coverage._cache_size()
+        if compiled > len(self._probe_keys):
+            raise RuntimeError(
+                f"fidelity-probe executable explosion: {compiled} "
+                f"compiled for {len(self._probe_keys)} prompt buckets — "
+                f"probe prompts must pad to power-of-two buckets with a "
+                f"traced length (O(log max_len) executables), never "
+                f"trace per prompt length")
 
     # -- admission: chunked hot path --------------------------------------
     def chunked_eligible(self, seq_len: int, override=None, *,
@@ -1285,6 +1559,8 @@ class ServeEngine:
                                self.prefix_store)
         prompt_tokens = sum(m.prompt_len for m in ms)
         hit_tokens = sum(m.prefix_hit_tokens for m in ms)
+        fid = [m.fidelity for m in ms
+               if getattr(m, "fidelity", None) is not None]
         n = len(ms)
         # requests retired without a first token carry ttft = NaN —
         # percentiles are over the requests that actually served
@@ -1317,6 +1593,11 @@ class ServeEngine:
             "prefix_store": (self.prefix_store.stats()
                              if self.prefix_store is not None else None),
             "decode_kernel": self.decode_kernel_summary(),
+            # routing-fidelity probe aggregates (NaN/0 when the probe
+            # dial is off — no request carries a fidelity then)
+            "fidelity_probed": len(fid),
+            "fidelity_p50": p50(fid),
+            "fidelity_min": (min(fid) if fid else float("nan")),
         }
 
 

@@ -135,6 +135,11 @@ class PrefixStoreStats:
     inserts: int
     demotions: int
     drops: int
+    # per-tier byte high watermarks over the store's lifetime — the
+    # memory ledger (serve/telemetry.py) reports residency peaks, not
+    # just the instantaneous occupancy a scrape happens to see
+    device_high_watermark: int = 0
+    host_high_watermark: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return self.__dict__.copy()
@@ -172,6 +177,8 @@ class PrefixStore:
         self._host_dev = None  # lazy jax.devices("cpu")[0]
         self.device_bytes = 0
         self.host_bytes = 0
+        self.device_high_watermark = 0
+        self.host_high_watermark = 0
         self.hits = 0
         self.misses = 0
         self.hit_tokens = 0
@@ -186,6 +193,14 @@ class PrefixStore:
 
     def _touch(self, node: _Node) -> None:
         self._lru.move_to_end(id(node))
+
+    def _note_watermarks(self) -> None:
+        """Bump the per-tier high watermarks; called after any byte
+        increase (insert, demotion, promotion)."""
+        if self.device_bytes > self.device_high_watermark:
+            self.device_high_watermark = self.device_bytes
+        if self.host_bytes > self.host_high_watermark:
+            self.host_high_watermark = self.host_bytes
 
     # -- lookup --------------------------------------------------------------
     def match(self, tokens, key: Tuple) -> Optional[_Node]:
@@ -269,6 +284,7 @@ class PrefixStore:
         node.snap = snap
         node.on_host = False
         self.device_bytes += snap.nbytes
+        self._note_watermarks()
         self.inserts += 1
         if self.on_event is not None:
             self.on_event("insert")
@@ -307,6 +323,7 @@ class PrefixStore:
         node.on_host = True
         self.device_bytes -= snap.nbytes
         self.host_bytes += snap.nbytes
+        self._note_watermarks()
         self.demotions += 1
         if self.on_event is not None:
             self.on_event("demotion")
@@ -362,6 +379,7 @@ class PrefixStore:
         node.on_host = False
         self.host_bytes -= snap.nbytes
         self.device_bytes += snap.nbytes
+        self._note_watermarks()
         if self.on_event is not None:
             self.on_event("promotion")
         self._touch(node)
@@ -400,4 +418,6 @@ class PrefixStore:
             snapshots=len(self._lru), nodes=self._count_nodes(),
             hits=self.hits, misses=self.misses, hit_tokens=self.hit_tokens,
             inserts=self.inserts, demotions=self.demotions,
-            drops=self.drops)
+            drops=self.drops,
+            device_high_watermark=self.device_high_watermark,
+            host_high_watermark=self.host_high_watermark)

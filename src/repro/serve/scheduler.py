@@ -89,6 +89,13 @@ class RequestMetrics:
     # that landed): these tokens issued NO prefill chunks, so a TTFT
     # win is attributable to reuse vs queueing via the prefill split
     prefix_hit_tokens: int = 0
+    # routing-fidelity probe results (only for sampled admissions when
+    # the engine runs with fidelity_probe_every=N; None = not probed):
+    # mean attention-mass coverage across routed layers, and the worst
+    # coverage among layers the router sent down the SA path — the
+    # number that quantifies what sparse attention actually discarded
+    fidelity: Optional[float] = None
+    fidelity_sa_min: Optional[float] = None
 
     @property
     def queue_delay(self) -> float:
@@ -206,6 +213,10 @@ class ContinuousScheduler:
         # one source of truth for the sparsity ladder: the engine's
         # dial (generate() + chunked admissions) follows this config
         engine.slo = self.slo
+        # register with the engine so ledger_report / attribution_report
+        # see this scheduler's pools even when it was constructed
+        # directly rather than via engine.scheduler()
+        engine._scheduler = self
         self.load = SLO.LoadTracker(self.slo)
         self.waiting: List[_InFlight] = []
         self.pools: Dict[Tuple, SlotPool] = {}
@@ -223,6 +234,10 @@ class ContinuousScheduler:
         self._tm_events: List[str] = []
         self._tm_pool_ids: Dict[Tuple, int] = {}
         self._tm_transitions = 0
+        # prefix-cache (hits, misses) watermark and the last sa_level
+        # seen, for per-tick deltas / transition events in TickRecord
+        self._tm_prefix: Tuple[int, int] = (0, 0)
+        self._tm_sa_level = engine.sa_level
 
     # -- submission --------------------------------------------------------
     def submit(self, req) -> int:
@@ -352,12 +367,17 @@ class ContinuousScheduler:
         rid = f.rid
         tracer.name_thread(TR.PID_REQUESTS, rid, f"req{rid}",
                            sort_index=rid)
+        span_args = {"status": f.status, "prompt_len": m.prompt_len,
+                     "n_generated": m.n_generated,
+                     "preemptions": m.preemptions,
+                     "prefix_hit_tokens": m.prefix_hit_tokens}
+        if m.fidelity is not None:
+            span_args["fidelity"] = round(m.fidelity, 6)
+            if m.fidelity_sa_min is not None:
+                span_args["fidelity_sa_min"] = round(m.fidelity_sa_min, 6)
         tracer.complete(
             f"req{rid}", TR.PID_REQUESTS, rid, m.arrival_t, now,
-            args={"status": f.status, "prompt_len": m.prompt_len,
-                  "n_generated": m.n_generated,
-                  "preemptions": m.preemptions,
-                  "prefix_hit_tokens": m.prefix_hit_tokens})
+            args=span_args)
         if m.admitted_t is not None:
             tracer.complete("queue", TR.PID_REQUESTS, rid,
                             m.arrival_t, m.admitted_t, cat="phase")
@@ -459,12 +479,15 @@ class ContinuousScheduler:
         return any(v.req.priority < priority and self._evictable(v)
                    for v in pool.active.values())
 
-    def _prefill_work(self, pending: List[_InFlight]) -> None:
+    def _prefill_work(self, pending: List[_InFlight]) -> Tuple[int, int]:
         """Stream up to ``prefill_chunks_per_tick`` chunks across the
         waiting requests' admission jobs, priority-then-arrival order —
-        prefill is tick work on equal footing with decode chunks."""
+        prefill is tick work on equal footing with decode chunks.
+        Returns (chunks streamed, prompt tokens streamed) so the cost
+        profiler can attribute the phase's expressed FLOPs."""
         eng = self.engine
         budget = self.prefill_chunks_per_tick
+        chunks = tokens_streamed = 0
         for inf in pending:
             if budget <= 0:
                 break
@@ -487,8 +510,10 @@ class ContinuousScheduler:
                 inf.metrics.prefill_start_t = self.clock()
             while budget > 0 and not inf.job.done:
                 t0 = self.clock() if eng.tracer is not None else 0.0
+                tokens_streamed += inf.job.plan[inf.job.idx][1]
                 inf.job.step()
                 self.prefill_chunk_ticks += 1
+                chunks += 1
                 budget -= 1
                 if eng.telemetry is not None:
                     eng.telemetry.counter("serve_prefill_chunks_total").inc()
@@ -498,6 +523,7 @@ class ContinuousScheduler:
                         t0, self.clock(), cat="phase")
             if inf.job.done and inf.metrics.prefill_done_t is None:
                 inf.metrics.prefill_done_t = self.clock()
+        return chunks, tokens_streamed
 
     def _admit(self, inf: _InFlight) -> bool:
         eng = self.engine
@@ -555,6 +581,16 @@ class ContinuousScheduler:
         pool.patterns_served.add(pattern)
         pool.write(slot, caches, logits, seq_len)
         pool.active[slot] = inf
+        if eng.fidelity_probe_every:
+            cov = eng._maybe_fidelity_probe(self._prefill_tokens(inf),
+                                            pattern)
+            if cov is not None and cov.size:
+                inf.metrics.fidelity = float(np.mean(cov))
+                sa = [float(cov[j]) for j, i in
+                      enumerate(eng.cfg.routable_layers())
+                      if j < cov.size and pattern[i] == "sa"]
+                if sa:
+                    inf.metrics.fidelity_sa_min = min(sa)
         if inf.job is not None:
             eng.dispatch_count += inf.job.dispatches
             inf.job = None
@@ -606,6 +642,12 @@ class ContinuousScheduler:
         self.ticks += 1
         now = self.clock()
         tm_on = eng.telemetry is not None
+        prof = eng.profiler
+        # prof_on gates every sync boundary below: unsampled ticks take
+        # the exact dispatch/sync sequence of a profiler-off run
+        prof_on = prof is not None and prof.should_sample(self.ticks)
+        if prof_on:
+            prof.note_sampled_tick()
         if tm_on:
             # deltas for this tick's flight record / counters; taking
             # them costs three attribute reads — nothing touches jax
@@ -623,11 +665,37 @@ class ContinuousScheduler:
         pending = sorted(self.waiting,
                          key=lambda i: (-self._eff_priority(i, now),
                                         i.metrics.arrival_t))
-        self._prefill_work(pending)
+        if prof_on:
+            # pure host work so far: expiry, the dial, the sort
+            prof.record("queue", host_s=self.clock() - now,
+                        count=len(pending))
+        t_pf = self.clock() if prof_on else 0.0
+        pf_chunks, pf_tokens = self._prefill_work(pending)
+        if prof_on:
+            t_host = self.clock()
+            eng.device_sync([inf.job.logits for inf in pending
+                            if inf.job is not None])
+            n_par, par_bytes = eng._params_cost()
+            prof.record("prefill_chunk",
+                        host_s=t_host - t_pf,
+                        device_s=self.clock() - t_host,
+                        flops=2.0 * n_par * pf_tokens,
+                        hbm_bytes=float(par_bytes) * pf_chunks,
+                        count=pf_chunks)
+        t_ad = self.clock() if prof_on else 0.0
         self.waiting = []
+        n_admitted = 0
         for inf in pending:
-            if not self._admit(inf):
+            if self._admit(inf):
+                n_admitted += 1
+            else:
                 self.waiting.append(inf)
+        if prof_on:
+            t_host = self.clock()
+            eng.device_sync([p.logits for p in self.pools.values()])
+            prof.record("admit", host_s=t_host - t_ad,
+                        device_s=self.clock() - t_host,
+                        count=n_admitted)
 
         for key, pool in self.pools.items():
             if not pool.active:
@@ -649,6 +717,7 @@ class ContinuousScheduler:
                     unroll=eng.decode_unroll)
             eng._note_decode_dispatch(dk)
             eng.dispatch_count += 1
+            t_disp = self.clock() if prof_on else 0.0
             pool.logits, pool.caches = logits, caches
             pool.advance(self.chunk)
             toks_np = np.asarray(toks)  # (capacity, chunk)
@@ -659,6 +728,21 @@ class ContinuousScheduler:
             # so their streams are bitwise those of an unfaulted run.
             finite = np.asarray(jnp.all(jnp.isfinite(pool.logits), axis=-1))
             now = self.clock()
+            if prof_on:
+                # host_s = dispatch (trace lookup + call issue); device_s
+                # = the wait inside the np.asarray syncs above — no
+                # extra sync is inserted, the tick already blocks here
+                cost = eng._expressed_decode_cost(pool, dk, self.chunk)
+                prof.record("decode", host_s=t_disp - t_decode,
+                            device_s=now - t_disp,
+                            flops=cost["flops"],
+                            hbm_bytes=cost["hbm_bytes"],
+                            count=self.chunk * len(pool.active))
+                for ph in ("kernel_hit", "kernel_decline"):
+                    if cost[ph]["layers"]:
+                        prof.record(ph, flops=cost[ph]["flops"],
+                                    hbm_bytes=cost[ph]["hbm_bytes"],
+                                    count=cost[ph]["layers"])
             if eng.tracer is not None:
                 # residency spans for the slots this chunk decoded; the
                 # timestamp pair brackets dispatch→host-sync, taken
@@ -699,6 +783,51 @@ class ContinuousScheduler:
         done, self._announce = self._announce, []
         return done
 
+    # -- memory ledger ------------------------------------------------------
+    def _ledger_entries(self) -> List[TM.PoolLedgerEntry]:
+        """One ledger row per slot pool, from static byte figures the
+        pools computed at create() — pure host arithmetic, no device
+        reads.  ``queued_match`` marks pools whose geometry matches
+        some waiting request whose routing is already known (a finished
+        or in-flight chunked job, or a cached monolithic-fallback key);
+        empty slots in pools matching NO queued work are *fragmented*
+        bytes — capacity stranded on geometries the queue doesn't
+        currently want.  Waiters that have not routed yet have no
+        geometry to match and deliberately don't count."""
+        queued = set()
+        for inf in self.waiting:
+            if inf.job is not None and inf.job.caches is not None:
+                queued.add(KC.slot_geometry(inf.job.caches))
+            elif inf.cached_key is not None:
+                queued.add(inf.cached_key)
+        entries = []
+        for key, pool in self.pools.items():
+            pid = self._tm_pool_ids.setdefault(key, len(self._tm_pool_ids))
+            entries.append(TM.PoolLedgerEntry(
+                pool=f"g{pid}", capacity=pool.capacity,
+                occupied=len(pool.active),
+                slot_payload_bytes=pool.slot_payload_bytes,
+                slot_overhead_bytes=pool.slot_overhead_bytes,
+                aux_bytes=pool.aux_bytes,
+                queued_match=key in queued))
+        return entries
+
+    def ledger_snapshot(self) -> Optional[TM.LedgerSnapshot]:
+        """Append the current device-memory picture to the engine's
+        ledger and return it (None when the ledger is disabled)."""
+        eng = self.engine
+        led = eng.ledger
+        if led is None:
+            return None
+        store = eng.prefix_store
+        return led.update(
+            t=self.clock(), tick=self.ticks,
+            pools=self._ledger_entries(),
+            prefix_device_bytes=(store.device_bytes
+                                 if store is not None else 0),
+            prefix_host_bytes=(store.host_bytes
+                               if store is not None else 0))
+
     def _tm_tick(self, t0: float, d0: int, p0: int, tok0: int) -> None:
         """End-of-tick telemetry: delta counters, gauge refresh, the
         scheduler-track tick span + counter samples, and this tick's
@@ -716,6 +845,22 @@ class ContinuousScheduler:
                     "sparsity-dial rung changes, either direction").inc(
             self.load.transitions - self._tm_transitions)
         self._tm_transitions = self.load.transitions
+        # sparsity-rung transition events: the flight recorder's tick
+        # stream shows exactly when (and in which direction) the dial
+        # moved, next to the queue/batch state that drove it
+        if eng.sa_level != self._tm_sa_level:
+            self._tm_events.append(
+                f"sa_level:{self._tm_sa_level}->{eng.sa_level}")
+            self._tm_sa_level = eng.sa_level
+        store = eng.prefix_store
+        hits = misses = 0
+        if store is not None:
+            hits = store.hits - self._tm_prefix[0]
+            misses = store.misses - self._tm_prefix[1]
+            self._tm_prefix = (store.hits, store.misses)
+        # snapshot the ledger BEFORE the gauge refresh so the exported
+        # ledger gauges describe this tick, not the previous one
+        snap = self.ledger_snapshot() if eng.ledger is not None else None
         eng._refresh_gauges()
         tracer = eng.tracer
         if tracer is not None:
@@ -733,12 +878,17 @@ class ContinuousScheduler:
             tracer.counter("sparsity", now,
                            {"sa_level": eng.sa_level,
                             "pressure": self.load.pressure})
+            if snap is not None:
+                # memory timeline: Perfetto step-plots the ledger tiers
+                tracer.counter("ledger_bytes", now,
+                               {"device": snap.device_bytes,
+                                "pool_live": snap.pool_live_bytes,
+                                "fragmentation": snap.fragmentation_bytes})
         fr = eng.flight_recorder
         if fr is not None:
             batch = {
                 f"g{self._tm_pool_ids.setdefault(k, len(self._tm_pool_ids))}":
                 p.occupancy() for k, p in self.pools.items()}
-            store = eng.prefix_store
             fr.record(TM.TickRecord(
                 tick=self.ticks, t=now,
                 queue_depth=len(self.waiting),
@@ -751,6 +901,11 @@ class ContinuousScheduler:
                                      if store is not None else 0),
                 prefix_host_bytes=(store.host_bytes
                                    if store is not None else 0),
+                prefix_hits=hits, prefix_misses=misses,
+                ledger_device_bytes=(snap.device_bytes
+                                     if snap is not None else 0),
+                ledger_fragmentation_bytes=(snap.fragmentation_bytes
+                                            if snap is not None else 0),
                 events=tuple(self._tm_events)))
         self._tm_events = []
 

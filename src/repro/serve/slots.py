@@ -54,18 +54,38 @@ class SlotPool:
     free: List[int] = field(default_factory=list)
     active: Dict[int, Any] = field(default_factory=dict)  # slot → host state
     patterns_served: Set[Tuple[Any, ...]] = field(default_factory=set)
+    # Byte accounting for the memory ledger (telemetry.PoolLedgerEntry):
+    # computed once at create() from static shapes — pure arithmetic, no
+    # device reads.  ``slot_*`` are per-slot-row; ``aux_bytes`` covers
+    # the pool's logits/pos buffers that kv_cache_stats never sees.
+    slot_payload_bytes: int = 0
+    slot_overhead_bytes: int = 0
+    aux_bytes: int = 0
 
     @classmethod
     def create(cls, cfg: ModelConfig, pattern, capacity: int, max_len: int,
                logits_like: jax.Array) -> "SlotPool":
+        # Function-level import: engine imports nothing from slots, so
+        # this cannot cycle — and it keeps the byte split definition in
+        # exactly one place (kv_cache_stats).
+        from repro.serve.engine import kv_cache_stats
+
         caches = KC.init_decode_caches(cfg, pattern, capacity, max_len)
+        logits = jnp.zeros((capacity,) + logits_like.shape[1:],
+                           logits_like.dtype)
+        pos = jnp.zeros((capacity,), jnp.int32)
+        stats = kv_cache_stats(caches)
+        # Every leaf's leading axis is ``capacity``, so the division is
+        # exact — ledger slot bytes reconcile with kv_cache_stats to the
+        # byte regardless of occupancy.
         return cls(
-            caches=caches,
-            logits=jnp.zeros((capacity,) + logits_like.shape[1:],
-                             logits_like.dtype),
-            pos=jnp.zeros((capacity,), jnp.int32),
+            caches=caches, logits=logits, pos=pos,
             pattern=pattern, capacity=capacity,
-            free=list(range(capacity - 1, -1, -1)))  # pop() → slot 0 first
+            free=list(range(capacity - 1, -1, -1)),  # pop() → slot 0 first
+            slot_payload_bytes=stats.payload_bytes // capacity,
+            slot_overhead_bytes=stats.overhead_bytes // capacity,
+            aux_bytes=(logits.size * logits.dtype.itemsize
+                       + pos.size * pos.dtype.itemsize))
 
     def geometry(self) -> Tuple:
         return KC.cache_geometry(self.caches)

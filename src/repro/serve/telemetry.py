@@ -1,7 +1,7 @@
 """Serving metrics registry + tick flight recorder (DESIGN.md
 §Observability).
 
-Two host-side telemetry primitives for the serving stack:
+Host-side telemetry primitives for the serving stack:
 
   MetricsRegistry — counters, gauges and histograms (with bounded
       quantile digests) keyed by (name, labels), rendered as Prometheus
@@ -15,6 +15,19 @@ Two host-side telemetry primitives for the serving stack:
       tier bytes, shed/quarantine events).  After an incident,
       ``engine.flight_recorder.dump()`` returns the last N ticks as
       plain dicts — the serving equivalent of a black box.
+  MemoryLedger — unified byte accounting across slot pools, prefix-cache
+      tiers and params: per-pool live/stranded/overhead split, a
+      fragmentation metric (empty-slot bytes in pools whose geometry
+      matches no queued work), and a device-byte high watermark.  The
+      scheduler feeds it already-known host integers (static shapes ×
+      occupancy); it never reads a device buffer.
+  TickProfiler — sampled per-tick latency attribution.  Every Nth tick
+      the scheduler brackets each phase (queue / prefill_chunk / admit /
+      decode, split kernel-hit vs kernel-decline) with timed
+      device-sync boundaries and records host-vs-device seconds plus
+      the analytic expressed FLOPs/HBM cost from ``launch/hlo_costs``;
+      unsampled ticks never sync.  ``report()`` emits the
+      achieved-vs-expressed efficiency table.
 
 Design rules (enforced by tests/test_telemetry.py):
 
@@ -23,9 +36,15 @@ Design rules (enforced by tests/test_telemetry.py):
     already-materialized host state (Python ints/floats the scheduler
     maintains anyway), so telemetry can never add a device sync or a
     compiled executable to the tick loop.
-  * Allocation-light.  Histograms keep a bounded reservoir (decimated
-    in place when full), the flight recorder is a ``deque(maxlen=…)``,
-    and metric objects are created once and mutated in place.
+  * Allocation-light.  Histograms keep a bounded reservoir (Algorithm-R
+    replacement when full, seeded per instance), the flight recorder is
+    a ``deque(maxlen=…)``, and metric objects are created once and
+    mutated in place.
+  * Deterministic.  Any sampling decision is driven by injectable
+    per-instance state (histogram reservoir seeds, profiler/probe
+    cadence counters), never module-level randomness — the bench
+    telemetry-overhead gate replays identical workloads and must not
+    eat sampling noise.
   * Off is free.  The scheduler/engine hold ``None`` instead of these
     objects when telemetry is disabled; the instrumented paths reduce
     to a single ``is not None`` test, keeping the telemetry-off run
@@ -38,10 +57,12 @@ exposition file (used by the CI telemetry smoke).
 from __future__ import annotations
 
 import math
+import random
 import re
 from collections import OrderedDict, deque
 from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from zlib import crc32 as _crc32
 
 # ---------------------------------------------------------------------------
 # Quantile digest helpers (shared with benchmarks/common.py)
@@ -108,14 +129,18 @@ class Histogram:
     """Streaming distribution with a bounded reservoir.
 
     Keeps exact ``count``/``sum``/``min``/``max`` plus a reservoir of at
-    most ``reservoir`` observations for quantiles.  When the reservoir
-    fills, it is decimated in place (every 2nd sample kept) and the
-    acceptance stride doubles — deterministic, allocation-bounded, and
-    faithful enough for p50/p95/p99 serving digests."""
-    __slots__ = ("count", "sum", "min", "max", "_res", "_cap", "_stride",
-                 "_seen")
+    most ``reservoir`` observations for quantiles, maintained with
+    Vitter's Algorithm R driven by an *injectable* seeded generator
+    (``random.Random(seed)``) — the sample is uniform over the stream,
+    allocation-bounded, and **deterministic for a fixed seed and
+    observation order**, so two runs of the same workload render the
+    same quantile digests (the bench telemetry-overhead gate compares
+    instrumented runs and must not eat sampling noise).  Faithful
+    enough for p50/p95/p99 serving digests."""
+    __slots__ = ("count", "sum", "min", "max", "_res", "_cap", "_seen",
+                 "_rng")
 
-    def __init__(self, reservoir: int = 1024):
+    def __init__(self, reservoir: int = 1024, seed: int = 0):
         if reservoir < 2:
             raise ValueError(f"Histogram: reservoir={reservoir} must be "
                              f">= 2 to hold a distribution")
@@ -125,8 +150,11 @@ class Histogram:
         self.max = float("-inf")
         self._res: List[float] = []
         self._cap = int(reservoir)
-        self._stride = 1
         self._seen = 0
+        # per-instance generator: module-level randomness would couple
+        # histograms to each other (and to anything else using
+        # ``random``), destroying replayability
+        self._rng = random.Random(seed)
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -137,14 +165,16 @@ class Histogram:
         self.min = min(self.min, v)
         self.max = max(self.max, v)
         self._seen += 1
-        if self._seen % self._stride:
+        if len(self._res) < self._cap:
+            self._res.append(v)
             return
-        if len(self._res) >= self._cap:
-            del self._res[::2]
-            self._stride *= 2
-            if self._seen % self._stride:
-                return
-        self._res.append(v)
+        # Algorithm R: keep observation i with probability cap/i, into a
+        # uniformly chosen slot — every prefix of the stream is equally
+        # represented, unlike stride decimation which over-weights
+        # whichever phase of the run aligned with the stride
+        j = self._rng.randrange(self._seen)
+        if j < self._cap:
+            self._res[j] = v
 
     def percentile(self, q: float) -> float:
         return quantile(self._res, q)
@@ -159,6 +189,30 @@ _LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
 
 def _escape(v: str) -> str:
     return v.replace("\\", r"\\").replace('"', r'\"').replace("\n", r"\n")
+
+
+def _unescape(v: str) -> str:
+    """Inverse of :func:`_escape` — a scraped label value must round-trip
+    to the string that was observed, or escaped payloads (request ids
+    with quotes, multi-line event text) silently corrupt on re-ingest."""
+    out: List[str] = []
+    i, n = 0, len(v)
+    while i < n:
+        c = v[i]
+        if c == "\\" and i + 1 < n:
+            nxt = v[i + 1]
+            if nxt == "n":
+                out.append("\n")
+            elif nxt in ('"', "\\"):
+                out.append(nxt)
+            else:  # unknown escape: Prometheus keeps it verbatim
+                out.append(c)
+                out.append(nxt)
+            i += 2
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out)
 
 
 def _fmt(v: float) -> str:
@@ -178,11 +232,15 @@ class MetricsRegistry:
     is paid once and steady-state updates are a dict hit plus a float
     add."""
 
-    def __init__(self):
+    def __init__(self, seed: int = 0):
         # name -> (kind, help); (name, labels) -> metric object
         self._meta: "OrderedDict[str, Tuple[str, str]]" = OrderedDict()
         self._metrics: Dict[Tuple[str, Tuple[Tuple[str, str], ...]],
                             object] = {}
+        # base seed for histogram reservoirs; each histogram derives a
+        # distinct stable seed from its (name, labels) key so identical
+        # runs render identical digests
+        self._seed = int(seed)
 
     # -- registration --------------------------------------------------------
     def _get(self, kind: str, name: str, help_: str, labels: Dict[str, str],
@@ -216,8 +274,13 @@ class MetricsRegistry:
 
     def histogram(self, name: str, help: str = "", reservoir: int = 1024,
                   **labels) -> Histogram:
+        # hash() is salted per-process for str; zlib.crc32 of the key is
+        # stable across runs, which is the whole point of seeding
+        key = ",".join([name] + sorted(f"{k}={v}"
+                                       for k, v in labels.items()))
+        seed = self._seed ^ _crc32(key.encode())
         return self._get("summary", name, help, labels,
-                         lambda: Histogram(reservoir))
+                         lambda: Histogram(reservoir, seed=seed))
 
     # -- rendering -----------------------------------------------------------
     @staticmethod
@@ -304,7 +367,7 @@ def parse_prometheus_text(text: str) -> Dict[str, List[Tuple[Dict[str, str],
             body = m.group("labels")
             consumed = 0
             for pm in _LABEL_PAIR_RE.finditer(body):
-                labels[pm.group(1)] = pm.group(2)
+                labels[pm.group(1)] = _unescape(pm.group(2))
                 consumed = pm.end()
             rest = body[consumed:].strip().strip(",")
             if rest:
@@ -340,7 +403,12 @@ class TickRecord:
     pressure: float                 # LoadTracker queue-pressure signal
     prefix_device_bytes: int = 0    # prefix store occupancy, device tier
     prefix_host_bytes: int = 0      # prefix store occupancy, host tier
-    events: Tuple[str, ...] = ()    # non-ok retirements: "status:rid"
+    prefix_hits: int = 0            # prefix-cache hits this tick
+    prefix_misses: int = 0          # prefix-cache misses this tick
+    ledger_device_bytes: int = 0    # MemoryLedger total (0 = ledger off)
+    ledger_fragmentation_bytes: int = 0  # stranded empty-slot bytes
+    events: Tuple[str, ...] = ()    # non-ok retirements "status:rid",
+                                    # sa_level moves "sa_level:old->new"
 
     def as_dict(self) -> Dict[str, object]:
         d = self.__dict__.copy()
@@ -378,6 +446,269 @@ class FlightRecorder:
 
     def clear(self) -> None:
         self._ring.clear()
+
+
+# ---------------------------------------------------------------------------
+# Memory ledger
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PoolLedgerEntry:
+    """One slot pool's byte accounting, from static shapes × occupancy.
+
+    ``slot_payload_bytes``/``slot_overhead_bytes`` are computed once at
+    pool creation (cache shapes never change over a pool's lifetime);
+    the per-tick update only multiplies them by host-side occupancy
+    counts, so the ledger adds no device reads to the tick loop."""
+    pool: str                   # geometry bucket id ("g0", "g1", …)
+    capacity: int               # total slots
+    occupied: int               # slots holding a resident request
+    slot_payload_bytes: int     # KV/state payload bytes per slot
+    slot_overhead_bytes: int    # positions/length metadata per slot
+    aux_bytes: int              # pool-level logits/pos buffers
+    queued_match: bool          # any queued request routes here?
+
+    @property
+    def live_bytes(self) -> int:
+        return self.occupied * self.slot_payload_bytes
+
+    @property
+    def stranded_bytes(self) -> int:
+        """Payload bytes held by empty slots — capacity paid for but
+        not serving anyone right now."""
+        return (self.capacity - self.occupied) * self.slot_payload_bytes
+
+    @property
+    def overhead_bytes(self) -> int:
+        return self.capacity * self.slot_overhead_bytes + self.aux_bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return self.capacity * (self.slot_payload_bytes
+                                + self.slot_overhead_bytes) + self.aux_bytes
+
+    @property
+    def fragmentation_bytes(self) -> int:
+        """Stranded bytes that cannot help the queue: empty-slot payload
+        in a pool whose geometry matches no queued request.  This is the
+        signal the ROADMAP's pool-rebalancing tentpole needs — bytes a
+        defragmenting allocator could reclaim right now."""
+        return 0 if self.queued_match else self.stranded_bytes
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "pool": self.pool,
+            "capacity": self.capacity,
+            "occupied": self.occupied,
+            "live_bytes": self.live_bytes,
+            "stranded_bytes": self.stranded_bytes,
+            "overhead_bytes": self.overhead_bytes,
+            "total_bytes": self.total_bytes,
+            "fragmentation_bytes": self.fragmentation_bytes,
+            "queued_match": self.queued_match,
+        }
+
+
+@dataclass
+class LedgerSnapshot:
+    """Point-in-time unified byte accounting across every HBM consumer
+    the serving stack knows about."""
+    t: float
+    tick: int
+    pools: Tuple[PoolLedgerEntry, ...]
+    prefix_device_bytes: int
+    prefix_host_bytes: int
+    params_bytes: int
+    device_high_watermark_bytes: int
+
+    @property
+    def pool_live_bytes(self) -> int:
+        return sum(p.live_bytes for p in self.pools)
+
+    @property
+    def pool_stranded_bytes(self) -> int:
+        return sum(p.stranded_bytes for p in self.pools)
+
+    @property
+    def pool_overhead_bytes(self) -> int:
+        return sum(p.overhead_bytes for p in self.pools)
+
+    @property
+    def pool_payload_bytes(self) -> int:
+        # live + stranded == capacity × per-slot payload, the quantity
+        # kv_cache_stats reports as payload_bytes for the pool caches
+        return self.pool_live_bytes + self.pool_stranded_bytes
+
+    @property
+    def fragmentation_bytes(self) -> int:
+        return sum(p.fragmentation_bytes for p in self.pools)
+
+    @property
+    def device_bytes(self) -> int:
+        """Everything resident in device memory that the ledger tracks
+        (host prefix tier excluded by definition)."""
+        return (self.pool_payload_bytes + self.pool_overhead_bytes
+                + self.prefix_device_bytes + self.params_bytes)
+
+    def reconcile(self, payload_bytes: int, overhead_bytes: int,
+                  prefix_device_bytes: int,
+                  prefix_host_bytes: int) -> Dict[str, int]:
+        """Deltas vs an independent ``kv_cache_stats`` walk of the same
+        pools+prefix store.  Payload and prefix tiers must agree exactly
+        (both sides are shape arithmetic over the same arrays); overhead
+        may differ by the pool-level aux buffers (logits/pos) that
+        kv_cache_stats does not see — callers assert accordingly."""
+        return {
+            "payload_delta": self.pool_payload_bytes - int(payload_bytes),
+            "overhead_delta": self.pool_overhead_bytes - int(overhead_bytes),
+            "prefix_device_delta":
+                self.prefix_device_bytes - int(prefix_device_bytes),
+            "prefix_host_delta":
+                self.prefix_host_bytes - int(prefix_host_bytes),
+        }
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "t": self.t,
+            "tick": self.tick,
+            "pools": [p.as_dict() for p in self.pools],
+            "pool_live_bytes": self.pool_live_bytes,
+            "pool_stranded_bytes": self.pool_stranded_bytes,
+            "pool_overhead_bytes": self.pool_overhead_bytes,
+            "fragmentation_bytes": self.fragmentation_bytes,
+            "prefix_device_bytes": self.prefix_device_bytes,
+            "prefix_host_bytes": self.prefix_host_bytes,
+            "params_bytes": self.params_bytes,
+            "device_bytes": self.device_bytes,
+            "device_high_watermark_bytes": self.device_high_watermark_bytes,
+        }
+
+
+class MemoryLedger:
+    """Unified byte-accounting registry.  The scheduler calls
+    :meth:`update` each tick with per-pool occupancy; everything else
+    (params bytes, per-slot byte constants) was measured once at
+    engine/pool construction.  Tracks the device-byte high watermark
+    across updates."""
+
+    def __init__(self, params_bytes: int = 0):
+        self.params_bytes = int(params_bytes)
+        self.high_watermark = 0
+        self.updates = 0
+        self._last: Optional[LedgerSnapshot] = None
+
+    def update(self, *, t: float, tick: int,
+               pools: Sequence[PoolLedgerEntry],
+               prefix_device_bytes: int = 0,
+               prefix_host_bytes: int = 0) -> LedgerSnapshot:
+        snap = LedgerSnapshot(
+            t=float(t), tick=int(tick), pools=tuple(pools),
+            prefix_device_bytes=int(prefix_device_bytes),
+            prefix_host_bytes=int(prefix_host_bytes),
+            params_bytes=self.params_bytes,
+            device_high_watermark_bytes=self.high_watermark)
+        if snap.device_bytes > self.high_watermark:
+            self.high_watermark = snap.device_bytes
+            snap.device_high_watermark_bytes = self.high_watermark
+        self.updates += 1
+        self._last = snap
+        return snap
+
+    def last(self) -> Optional[LedgerSnapshot]:
+        return self._last
+
+
+# ---------------------------------------------------------------------------
+# Per-tick cost attribution profiler
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PhaseStat:
+    """Accumulated attribution for one tick phase across all sampled
+    ticks.  ``device_s`` is wall time between timed sync boundaries
+    (host dispatch + device compute for that phase's work); ``host_s``
+    is the phase's pure-host bookkeeping time.  ``flops``/``hbm_bytes``
+    are the analytic *expressed* cost from ``launch/hlo_costs`` for the
+    work the phase dispatched."""
+    phase: str
+    ticks: int = 0
+    host_s: float = 0.0
+    device_s: float = 0.0
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    count: int = 0  # phase-specific unit (chunks, decode steps, layers)
+
+    def as_dict(self) -> Dict[str, object]:
+        d = {
+            "phase": self.phase, "ticks": self.ticks, "count": self.count,
+            "host_s": self.host_s, "device_s": self.device_s,
+            "expressed_flops": self.flops,
+            "expressed_hbm_bytes": self.hbm_bytes,
+        }
+        wall = self.host_s + self.device_s
+        d["host_frac"] = self.host_s / wall if wall > 0 else 0.0
+        # achieved-vs-expressed: what rate did the device sustain against
+        # the analytic cost the phase expressed?
+        d["achieved_gflops_per_s"] = (
+            self.flops / self.device_s / 1e9 if self.device_s > 0 else 0.0)
+        d["achieved_gbytes_per_s"] = (
+            self.hbm_bytes / self.device_s / 1e9
+            if self.device_s > 0 else 0.0)
+        return d
+
+
+class TickProfiler:
+    """Sampled per-tick latency/cost attribution.
+
+    ``should_sample(tick)`` is a modulus test on the host tick counter —
+    deterministic, so paired bench runs profile the same ticks.  On a
+    sampled tick the *scheduler* brackets each phase with its clock and
+    a device sync (the profiler itself never imports jax) and calls
+    :meth:`record`; unsampled ticks skip both the syncs and the calls
+    entirely, keeping the steady-state path dispatch-identical."""
+
+    def __init__(self, every: int = 32):
+        if every < 1:
+            raise ValueError(
+                f"TickProfiler: every={every} must be >= 1 "
+                f"(1 = profile every tick)")
+        self.every = int(every)
+        self.sampled_ticks = 0
+        self._phases: "OrderedDict[str, PhaseStat]" = OrderedDict()
+
+    def should_sample(self, tick: int) -> bool:
+        return tick % self.every == 0
+
+    def note_sampled_tick(self) -> None:
+        self.sampled_ticks += 1
+
+    def record(self, phase: str, *, host_s: float = 0.0,
+               device_s: float = 0.0, flops: float = 0.0,
+               hbm_bytes: float = 0.0, count: int = 1) -> None:
+        st = self._phases.get(phase)
+        if st is None:
+            st = self._phases[phase] = PhaseStat(phase=phase)
+        st.ticks += 1
+        st.host_s += float(host_s)
+        st.device_s += float(device_s)
+        st.flops += float(flops)
+        st.hbm_bytes += float(hbm_bytes)
+        st.count += int(count)
+
+    def report(self) -> Dict[str, object]:
+        """Per-phase achieved-vs-expressed efficiency table, JSON-ready."""
+        phases = [st.as_dict() for st in self._phases.values()]
+        total_host = sum(p["host_s"] for p in phases)
+        total_dev = sum(p["device_s"] for p in phases)
+        return {
+            "every": self.every,
+            "sampled_ticks": self.sampled_ticks,
+            "total_host_s": total_host,
+            "total_device_s": total_dev,
+            "phases": phases,
+        }
 
 
 def main(argv: Optional[List[str]] = None) -> int:

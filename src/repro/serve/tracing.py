@@ -222,8 +222,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"INVALID trace: {e}", file=sys.stderr)
         return 1
     spans = request_spans(obj)
+    probed = sum(1 for ev in spans.values()
+                 if "fidelity" in ev.get("args", {}))
     print(f"ok: {sum(census.values())} events {census}; "
-          f"{len(spans)} request lifetime spans")
+          f"{len(spans)} request lifetime spans ({probed} with fidelity)")
     return 0
 
 

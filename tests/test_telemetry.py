@@ -320,3 +320,90 @@ def test_load_tracker_counts_transitions_both_directions():
     assert lt.level == 1 and lt.transitions == 1
     lt.observe(0, 4)  # pressure 0.0 → down
     assert lt.level == 0 and lt.transitions == 2
+
+
+# ---------------------------------------------------------------------------
+# Exposition-format edge cases (parse_prometheus_text)
+# ---------------------------------------------------------------------------
+
+def test_empty_registry_render_is_rejected_by_parser():
+    # an empty registry renders to whitespace only — a scrape of that is
+    # an unscrapeable endpoint, and the validator says so explicitly
+    reg = TM.MetricsRegistry()
+    with pytest.raises(ValueError, match="no metric samples found"):
+        TM.parse_prometheus_text(reg.render())
+    with pytest.raises(ValueError, match="no metric samples found"):
+        TM.parse_prometheus_text("")
+    # comments alone are not samples either
+    with pytest.raises(ValueError, match="no metric samples found"):
+        TM.parse_prometheus_text("# TYPE foo counter\n")
+
+
+def test_escaped_label_values_round_trip():
+    reg = TM.MetricsRegistry()
+    nasty = 'quote:" slash:\\ newline:\nend'
+    reg.counter("escape_test_total", "escaping", rid=nasty).inc(3)
+    text = reg.render()
+    # the raw newline must be escaped, not split the sample across lines
+    assert len([ln for ln in text.splitlines() if 'rid="' in ln]) == 1
+    samples = TM.parse_prometheus_text(text)
+    (labels, val), = samples["escape_test_total"]
+    assert labels == {"rid": nasty}  # exact round-trip, not lossy
+    assert val == 3.0
+
+
+def test_nan_and_inf_round_trip():
+    reg = TM.MetricsRegistry()
+    reg.gauge("edge_nan", "x").set(float("nan"))
+    reg.gauge("edge_pinf", "x").set(float("inf"))
+    reg.gauge("edge_ninf", "x").set(float("-inf"))
+    samples = TM.parse_prometheus_text(reg.render())
+    (_, v_nan), = samples["edge_nan"]
+    (_, v_pinf), = samples["edge_pinf"]
+    (_, v_ninf), = samples["edge_ninf"]
+    assert v_nan != v_nan  # NaN survives as NaN
+    assert v_pinf == float("inf")
+    assert v_ninf == float("-inf")
+
+
+def test_histogram_reservoir_deterministic_for_fixed_seed():
+    # overflow the reservoir so Algorithm-R replacement actually runs;
+    # a fixed seed must reproduce the exact sample, a different seed a
+    # (almost surely) different one — and registries derive per-metric
+    # seeds, so two same-seeded registries render identically
+    xs = [float(i % 97) for i in range(1000)]
+    def fill(seed):
+        h = TM.Histogram(reservoir=32, seed=seed)
+        for x in xs:
+            h.observe(x)
+        return h
+    a, b, c = fill(7), fill(7), fill(8)
+    assert a._res == b._res
+    assert a.percentile(50) == b.percentile(50)
+    assert a._res != c._res
+    def render(seed):
+        reg = TM.MetricsRegistry(seed=seed)
+        h = reg.histogram("det_ms", "d", reservoir=32)
+        for x in xs:
+            h.observe(x)
+        return reg.render()
+    assert render(1) == render(1)
+    assert render(1) != render(2)
+
+
+def test_tick_record_as_dict_carries_ledger_and_prefix_fields():
+    r = TM.TickRecord(tick=3, t=0.5, queue_depth=1, n_active=2,
+                      capacity=4, batch_by_geometry={"g0": 2},
+                      prefill_chunks=1, dispatch_delta=2, sa_level=1,
+                      pressure=0.25, prefix_hits=2, prefix_misses=1,
+                      ledger_device_bytes=4096,
+                      ledger_fragmentation_bytes=512,
+                      events=("sa_level:0->1",))
+    d = r.as_dict()
+    assert d["prefix_hits"] == 2 and d["prefix_misses"] == 1
+    assert d["ledger_device_bytes"] == 4096
+    assert d["ledger_fragmentation_bytes"] == 512
+    assert d["events"] == ["sa_level:0->1"]
+    # mutating the dict must not alias the record's containers
+    d["batch_by_geometry"]["g1"] = 9
+    assert "g1" not in r.batch_by_geometry
