@@ -1,1 +1,3 @@
 from repro.distributed.sharding import constrain, logical_rules  # noqa: F401
+from repro.distributed.pool_sharding import (  # noqa: F401
+    mesh_signature, pool_cache_specs, replicate, shard_pool_caches)

@@ -16,7 +16,7 @@ HOW a full cache is read at 500K.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -79,9 +79,12 @@ def lse_combine_decode(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 def _flat_axis_index(kv_axes: Tuple[str, ...]):
+    """Row-major flat shard index over possibly-multiple mesh axes.
+    ``psum(1, axis)`` is the axis size on every jax version
+    (``lax.axis_size`` only exists on newer releases)."""
     idx = lax.axis_index(kv_axes[0])
     for a in kv_axes[1:]:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        idx = idx * lax.psum(1, a) + lax.axis_index(a)
     return idx
 
 
@@ -136,11 +139,38 @@ def make_distributed_dot_decode(mesh, kv_axes: Tuple[str, ...],
     Declines (returns None) for short caches — ring buffers stay on the
     local path — and for any non-shared mask (``valid.ndim != 1``,
     which includes pooled per-slot validity: slot pools batch short
-    requests, the opposite regime from sequence-sharded 500K)."""
+    requests, the opposite regime from sequence-sharded 500K).
+
+    Speaks the same trace protocol as
+    ``kernels.decode_attention.make_kernel_decode_attn``: every
+    accept/decline decision lands in ``fn.trace_log`` as ``(event,
+    reason)`` with the engine's closed decline vocabulary ("min_len",
+    "mask_rank"), so the kernel-decision replay and the
+    ``decode_kernel_{hit,decline}`` counters cover the distributed
+    path identically."""
+    trace_log: List[Tuple[str, str]] = []
+
+    def _note(event: str, reason: str) -> None:
+        trace_log.append((event, reason))
+
     def fn(q, k, v, valid, scale=None):
         if valid.ndim != 1 or k.shape[2] < min_seq:
+            _note("decline",
+                  "mask_rank" if valid.ndim != 1 else "min_len")
             return None
-        return lse_combine_decode(q, k, v, valid, mesh, kv_axes,
-                                  scale=scale)
+        out = lse_combine_decode(q, k, v, valid, mesh, kv_axes,
+                                 scale=scale)
+        _note("hit", "lse_combine")
+        return out
+
+    def drain_log() -> List[Tuple[str, str]]:
+        out = list(trace_log)
+        trace_log.clear()
+        return out
+
+    fn.supports_pooled = False
     fn.supports_scale = True
+    fn.trace_log = trace_log
+    fn.drain_log = drain_log
+    fn.min_len = min_seq
     return fn

@@ -1,0 +1,90 @@
+"""Committed shardings for the pooled serving path (DESIGN.md
+§Distributed serving).
+
+Tensor-parallel pooled decode shards the KV *head* axis over the mesh
+"model" axis and lets GSPMD propagate: every shard owns complete
+softmax rows for its head subset, so attention over the cache needs no
+collective at all — the only per-layer collectives are the tiny
+activation combines at the head-sharded projections (the all-reduce of
+the row-parallel ``wo`` contraction, O(d_model) per token).  This is
+the committed-sharding expression of the ``lse_combine_decode``
+flash-decoding idea: head sharding makes the LSE combine degenerate
+(each shard's softmax is already exact for its heads), keeping the
+collective O(H·D)-small while the cache never moves.
+
+What shards and what replicates:
+
+  * FullKV / RingKV ``k``/``v`` (slots, Hkv, S, D) — "model" on the
+    Hkv dim when divisible; the slot axis stays unsharded (slot pools
+    batch *requests*, and per-slot admission writes must stay local).
+  * MLA LatentKV / RingLatentKV — REPLICATED.  The latent ``ckv`` has
+    no per-head axis: its R dim is the *contraction* dim of the score
+    einsum, so sharding it would all-reduce O(S)-sized scores every
+    step — exactly the cache-scale collective this layout exists to
+    avoid.  MLA still gets tensor parallelism from its head-sharded
+    absorbed projections (``w_ukv`` is row-parallel in
+    launch/shardings.py); only the cache is kept whole.
+  * MambaCache ``h``/``conv_tail`` — REPLICATED (conv/ssm state mixes
+    channels; the state is small and per-slot).
+  * All bookkeeping (``positions``, ``length``) and the pool's
+    ``logits``/``pos`` — REPLICATED.  The scheduler reads these on the
+    host every tick; replication keeps those reads collective-free and
+    keeps admission/retire bookkeeping identical to the single-device
+    path.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Cache fields that carry a (slots, Hkv, S, D) layout — the only ones
+# head-shardable.  Everything else replicates (module docstring).
+_HEAD_SHARDED_FIELDS = frozenset({"k", "v"})
+
+
+def mesh_signature(mesh: Optional[Mesh]) -> Optional[Tuple]:
+    """Hashable mesh identity for executable-guard keys.
+
+    Committed shardings split jit cache entries per mesh, so the
+    engine's O(#geometries) guard must count per-(geometry, mesh):
+    this is the mesh half of that key.  None ⇒ the single-device path
+    (uncommitted inputs), preserved as a distinct bucket."""
+    if mesh is None:
+        return None
+    return tuple((name, int(mesh.shape[name])) for name in mesh.axis_names)
+
+
+def _model_size(mesh: Mesh) -> int:
+    return int(mesh.shape.get("model", 1))
+
+
+def pool_cache_specs(caches: Any, mesh: Mesh):
+    """NamedSharding tree for a slot-pool decode-cache list.
+
+    Accepts concrete caches or an ``eval_shape`` spec — only shapes,
+    dtypes and pytree paths are read."""
+    model = _model_size(mesh)
+
+    def assign(path, leaf):
+        name = getattr(path[-1], "name", None) if path else None
+        shp = tuple(leaf.shape)
+        if (name in _HEAD_SHARDED_FIELDS and len(shp) == 4
+                and shp[1] % model == 0 and shp[1] >= model):
+            return NamedSharding(mesh, P(None, "model", None, None))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(assign, caches)
+
+
+def shard_pool_caches(caches: Any, mesh: Mesh):
+    """Commit a cache list to its pool shardings (device_put)."""
+    return jax.device_put(caches, pool_cache_specs(caches, mesh))
+
+
+def replicate(tree: Any, mesh: Mesh):
+    """Commit a pytree to the replicated sharding (bookkeeping/logits)."""
+    return jax.device_put(
+        tree, jax.tree.map(lambda _: NamedSharding(mesh, P()), tree))

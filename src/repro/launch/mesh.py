@@ -50,8 +50,14 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Tiny mesh over the real local devices (tests)."""
     n = data * model
-    return _make_mesh((data, model), ("data", "model"),
-                      jax.devices()[:n])
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {(data, model)}, have "
+            f"{len(devices)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            "before any jax import (see launch/dryrun.py)")
+    return _make_mesh((data, model), ("data", "model"), devices[:n])
 
 
 # Hardware constants (TPU v5e) — used by the roofline analysis.

@@ -286,6 +286,13 @@ def main() -> None:
                     help="enable the device-memory ledger and write its "
                          "reconciled JSON report (with the profiler "
                          "table when --profile-every is set) here")
+    ap.add_argument("--mesh-model", type=int, default=0,
+                    help="tensor-parallel width: shard KV heads and "
+                         "attention/MLP weights over an N-way 'model' "
+                         "mesh axis (0 = single-device serving; on CPU "
+                         "set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 "
+                         "before launch)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -307,6 +314,12 @@ def main() -> None:
     telemetry = bool(args.metrics_out or args.trace_out)
     max_len = args.prompt_len + args.shared_prefix + args.gen_len + 8
     decode_attn = _decode_kernel(cfg, args, max_len)
+    mesh = None
+    if args.mesh_model > 1:
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh(data=1, model=args.mesh_model)
+        print(f"mesh: (1, {args.mesh_model}) over "
+              f"{len(jax.devices())} devices")
     engine = ServeEngine(params, cfg, max_len=max_len,
                          sparse_decode=not args.dense,
                          decode_attn=decode_attn,
@@ -316,7 +329,8 @@ def main() -> None:
                          slo=slo, telemetry=telemetry,
                          profile_every=args.profile_every,
                          fidelity_probe_every=args.fidelity_probe_every,
-                         memory_ledger=bool(args.ledger_out))
+                         memory_ledger=bool(args.ledger_out),
+                         mesh=mesh)
     if args.continuous:
         _serve_continuous(engine, reqs, args)
         _print_kernel_summary(engine)

@@ -44,13 +44,21 @@ from repro.configs.base import ModelConfig
 # whose package chain loads repro.serve — a name import here would trip
 # that cycle at interpreter start
 from repro.core import router as RT
+from repro.distributed import pool_sharding as PSH
 from repro.launch import hlo_costs as HL
+from repro.launch import shardings as SHD
 from repro.models import model as MD
 from repro.serve import kv_cache as KC
 from repro.serve import prefix_cache as PXC
 from repro.serve import slo as SLO
 from repro.serve import telemetry as TM
 from repro.serve import tracing as TR
+
+# Closed decline vocabulary shared by every decode-attention adapter
+# (kernels.decode_attention, distributed.decode): the engine
+# pre-registers one counter label per reason, so a new reason MUST be
+# added here or its declines silently never export.
+DECODE_KERNEL_DECLINE_REASONS = ("min_len", "mask_rank")
 
 
 # ---------------------------------------------------------------------------
@@ -258,32 +266,60 @@ class KVStats:
     ``prefix_device_bytes``/``prefix_host_bytes`` report the
     shared-prefix snapshot store's occupancy per tier alongside —
     the store holds whole boundary states, so its bytes are neither
-    payload nor overhead of any live request."""
+    payload nor overhead of any live request.
+
+    ``payload_shard_bytes``/``overhead_shard_bytes`` are the bytes one
+    device actually holds: for mesh-sharded pools the head-sharded k/v
+    leaves divide by the "model" axis while replicated leaves count in
+    full, so shard < global; on a single device (or a fully replicated
+    tree) they equal the global figures.  The memory ledger reconciles
+    against the *global* figures — exact under any mesh by
+    construction (DESIGN.md §Distributed serving)."""
     payload_bytes: int
     overhead_bytes: int
     prefix_device_bytes: int = 0
     prefix_host_bytes: int = 0
+    payload_shard_bytes: int = 0
+    overhead_shard_bytes: int = 0
 
     @property
     def total_bytes(self) -> int:
         return self.payload_bytes + self.overhead_bytes
 
 
+def _leaf_bytes(leaf) -> Tuple[int, int]:
+    """(global, per-shard) bytes of one cache leaf.  The per-shard
+    figure reads ``sharding.shard_shape`` when the leaf carries one
+    (committed mesh arrays); host arrays and abstract specs fall back
+    to global = shard."""
+    nbytes = leaf.size * leaf.dtype.itemsize
+    sharding = getattr(leaf, "sharding", None)
+    if sharding is None or not hasattr(sharding, "shard_shape"):
+        return nbytes, nbytes
+    shard = int(np.prod(sharding.shard_shape(tuple(leaf.shape)),
+                        dtype=np.int64)) if leaf.ndim else 1
+    return nbytes, shard * leaf.dtype.itemsize
+
+
 def kv_cache_stats(caches, prefix_store=None) -> KVStats:
-    payload = overhead = 0
+    payload = overhead = payload_shard = overhead_shard = 0
     for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
         name = getattr(path[-1], "name", None) if path else None
-        nbytes = leaf.size * leaf.dtype.itemsize
+        nbytes, shard_bytes = _leaf_bytes(leaf)
         if name in KC.OVERHEAD_FIELDS:
             overhead += nbytes
+            overhead_shard += shard_bytes
         else:
             payload += nbytes
+            payload_shard += shard_bytes
     pd = ph = 0
     if prefix_store is not None:
         pd = prefix_store.device_bytes
         ph = prefix_store.host_bytes
     return KVStats(payload_bytes=payload, overhead_bytes=overhead,
-                   prefix_device_bytes=pd, prefix_host_bytes=ph)
+                   prefix_device_bytes=pd, prefix_host_bytes=ph,
+                   payload_shard_bytes=payload_shard,
+                   overhead_shard_bytes=overhead_shard)
 
 
 def kv_cache_bytes(caches) -> int:
@@ -303,14 +339,20 @@ def _arr_sig(a) -> Optional[Tuple]:
 
 
 def decode_executable_key(caches, pos, n_steps: int, greedy: bool,
-                          duo_layers, enc_out, rng) -> Tuple:
+                          duo_layers, enc_out, rng,
+                          mesh_sig: Optional[Tuple] = None) -> Tuple:
     """The full static+structural signature of one ``decode_many``
     executable.  ``ServeEngine`` and ``ContinuousScheduler`` both record
     these so the executable-count guard can compare against the jit
     cache — the pos signature matters because a slot pool decodes with
-    per-slot (B,) positions while ``generate`` uses a shared scalar."""
+    per-slot (B,) positions while ``generate`` uses a shared scalar.
+    ``mesh_sig`` (``pool_sharding.mesh_signature``) distinguishes the
+    mesh-committed variants: sharding-committed inputs key separate jit
+    entries, so the guard counts per-(geometry, mesh), never letting a
+    mesh hide a pattern-keyed recompile."""
     return (KC.cache_geometry(caches), _arr_sig(jnp.asarray(pos)),
-            n_steps, greedy, duo_layers, _arr_sig(enc_out), _arr_sig(rng))
+            n_steps, greedy, duo_layers, _arr_sig(enc_out), _arr_sig(rng),
+            mesh_sig)
 
 
 @dataclass
@@ -383,6 +425,8 @@ class ChunkedPrefill:
                 self.logits, self.caches = eng._stream_chunk(
                     params=eng.params, tokens=chunk, caches=self.caches,
                     start=jnp.int32(start))
+            self.caches, self.logits = eng._commit_state(
+                self.caches, self.logits)
             self.dispatches += 1
         self.chunks_streamed += 1
         self.idx += 1
@@ -416,7 +460,8 @@ class ChunkedPrefill:
         self.caches = eng._seed_chunk(pf.caches, pattern=self.pattern,
                                       batch=chunk.shape[0],
                                       max_len=eng.max_len)
-        self.logits = pf.logits
+        self.caches, self.logits = eng._commit_state(self.caches,
+                                                     pf.logits)
         self.dispatches += 2  # routing prefill + the seed insert
 
 
@@ -469,12 +514,25 @@ class ServeEngine:
                  flight_recorder_ticks: int = 512,
                  profile_every: int = 0,
                  fidelity_probe_every: int = 0,
-                 memory_ledger: bool = False):
+                 memory_ledger: bool = False,
+                 mesh=None):
         if routing_pooling not in ("prefix", "prefix_suffix"):
             raise ValueError(
                 f"routing_pooling={routing_pooling!r}: expected 'prefix' "
                 f"(chunk-invariant serving default) or 'prefix_suffix' "
                 f"(the paper's pooling; forces the monolithic prefill)")
+        # Tensor-parallel serving (DESIGN.md §Distributed serving):
+        # ``mesh`` commits weights tensor-parallel (column/row per
+        # launch/shardings.py) and every slot pool head-sharded on the
+        # mesh "model" axis; GSPMD propagates, so the per-step
+        # collectives stay O(H·D)/O(d_model) activation combines — the
+        # cache never moves.  ``mesh=None`` keeps every array
+        # uncommitted: bitwise + dispatch-count identical to before.
+        self.mesh = mesh
+        self._mesh_sig = PSH.mesh_signature(mesh)
+        if mesh is not None:
+            params = jax.device_put(
+                params, SHD.param_shardings_decode_tp(params, mesh))
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
@@ -739,7 +797,7 @@ class ServeEngine:
         reg.counter("decode_kernel_hit_layers_total",
                     "attention layers served by the decode kernel, "
                     "accumulated per compiled decode call")
-        for reason in ("min_len", "mask_rank"):
+        for reason in DECODE_KERNEL_DECLINE_REASONS:
             reg.counter("decode_kernel_decline_layers_total",
                         "attention layers where the kernel adapter "
                         "declined and dense decode ran instead",
@@ -873,6 +931,32 @@ class ServeEngine:
                 "ServeEngine with telemetry=True (or pass --trace-out "
                 "to launch/serve.py)")
         self.tracer.export(path)
+
+    # -- tensor-parallel state normalization --------------------------------
+    def mesh_shape(self) -> Optional[Tuple[int, ...]]:
+        """Axis sizes of the serving mesh (telemetry's TickRecord shape);
+        None on the single-device path."""
+        if self.mesh is None:
+            return None
+        return tuple(int(self.mesh.shape[a]) for a in self.mesh.axis_names)
+
+    def _commit_state(self, caches, logits):
+        """Commit (caches, logits) to the pool shardings — k/v
+        head-sharded on "model", everything else replicated.  Called at
+        every producer boundary of the admission pipeline (seed, stream
+        chunk, prefix restore) so each consumer jit (stream, snapshot,
+        slot write, decode) sees exactly ONE input sharding per
+        geometry: compiler-chosen output shardings would otherwise vary
+        between the fresh-prefill and warm-restore paths and split jit
+        entries, breaking the O(#geometries) guard.  A no-op when the
+        state already carries the target shardings, and the identity on
+        the mesh=None path."""
+        if self.mesh is None:
+            return caches, logits
+        caches = PSH.shard_pool_caches(caches, self.mesh)
+        if logits is not None:
+            logits = PSH.replicate(logits, self.mesh)
+        return caches, logits
 
     # -- decode-attention backend (kernel-path accounting) -----------------
     def _attn_ctx(self):
@@ -1067,7 +1151,14 @@ class ServeEngine:
                 "overhead_bytes": stats.overhead_bytes,
                 "prefix_device_bytes": stats.prefix_device_bytes,
                 "prefix_host_bytes": stats.prefix_host_bytes,
+                # per-device bytes: < global for mesh-sharded pools
+                # (k/v divide by the "model" axis), == global on one
+                # device.  Reconciliation stays on the global figures.
+                "payload_shard_bytes": stats.payload_shard_bytes,
+                "overhead_shard_bytes": stats.overhead_shard_bytes,
             },
+            "mesh": (list(self.mesh_shape())
+                     if self.mesh is not None else None),
             "reconciliation": None,
             "aux_bytes": 0,
         }
@@ -1231,20 +1322,29 @@ class ServeEngine:
         return bool(self.cfg.flux.enabled and self.cfg.routable_layers())
 
     def _snap_sig(self, caches, logits) -> Tuple:
-        return (KC.cache_geometry(caches), _arr_sig(logits))
+        return (KC.cache_geometry(caches), _arr_sig(logits),
+                self._mesh_sig)
 
     def _restore_state(self, node: PXC._Node):
         """Snapshot → fresh device buffers the admission may own (and
         later donate).  Host-tier snapshots prefetch to device and are
         promoted in place (the next hit skips the transfer); either
         tier then hits the same per-geometry copy executable
-        (uncommitted inputs — the store never hands out committed
-        arrays), so restores stay O(#geometries) (guard-asserted)."""
+        (uncommitted inputs on the single-device path; under a mesh,
+        the pool shardings the whole admission pipeline is normalized
+        to), so restores stay O(#geometries) (guard-asserted)."""
         snap = node.snap
-        # deviceless device_put: prefetches host (numpy) tiers to the
-        # default device and is a no-op for device tiers — either way
-        # the result is *uncommitted*, keying the same jit entry
-        caches, logits = jax.device_put((snap.caches, snap.logits))
+        if self.mesh is not None:
+            # commit to the pool shardings — the same flavor every
+            # other producer boundary emits, so the snapshot copy jit
+            # keeps one entry per geometry under the mesh too
+            caches, logits = self._commit_state(snap.caches, snap.logits)
+        else:
+            # deviceless device_put: prefetches host (numpy) tiers to
+            # the default device and is a no-op for device tiers —
+            # either way the result is *uncommitted*, keying the same
+            # jit entry
+            caches, logits = jax.device_put((snap.caches, snap.logits))
         if node.on_host:
             # the prefetched copy is nobody else's buffer (the job only
             # ever receives the jit copy below) — hand it to the store
@@ -1458,6 +1558,9 @@ class ServeEngine:
             logits = pf.logits
             p_fa = None if pf.p_fa is None else np.asarray(pf.p_fa)
             dispatches += 2  # prefill + the jitted repack
+            # the monolithic repack emits compiler-chosen shardings
+            # under a mesh; normalize so decode sees the pool flavor
+            caches, logits = self._commit_state(caches, logits)
         if (seq_len + n_steps > self.max_len
                 and any(isinstance(c, (KC.FullKV, KC.LatentKV))
                         for c in caches)):
@@ -1473,7 +1576,8 @@ class ServeEngine:
         fa_heads, duo_layers = MD.routing_head_split(cfg, pattern)
         pos = jnp.int32(seq_len)
         dk = decode_executable_key(caches, pos, n_steps, greedy,
-                                   duo_layers, enc_out, rng)
+                                   duo_layers, enc_out, rng,
+                                   mesh_sig=self._mesh_sig)
         self._decode_keys.add(dk)
         with warnings.catch_warnings(), self._attn_ctx():
             # donation is a no-op on backends without buffer aliasing

@@ -559,7 +559,7 @@ class ContinuousScheduler:
         pool = self.pools.get(key)
         if pool is None:
             pool = SlotPool.create(eng.cfg, pattern, self.slots_per_bucket,
-                                   eng.max_len, logits)
+                                   eng.max_len, logits, mesh=eng.mesh)
             if KC.slot_geometry(pool.caches) != key:
                 raise AssertionError(
                     "init_decode_caches geometry diverged from "
@@ -702,7 +702,8 @@ class ContinuousScheduler:
                 continue
             t_decode = self.clock() if tm_on else 0.0
             dk = decode_executable_key(pool.caches, pool.pos, self.chunk,
-                                       True, None, None, self._rng)
+                                       True, None, None, self._rng,
+                                       mesh_sig=eng._mesh_sig)
             eng._decode_keys.add(dk)
             with warnings.catch_warnings(), eng._attn_ctx():
                 # install the engine's decode backend for the pooled
@@ -718,6 +719,12 @@ class ContinuousScheduler:
             eng._note_decode_dispatch(dk)
             eng.dispatch_count += 1
             t_disp = self.clock() if prof_on else 0.0
+            if eng.mesh is not None:
+                # pin the decode outputs back to the pool shardings so
+                # the next tick's inputs key the SAME executable even
+                # if the compiler chose different output shardings
+                # (no-op copy when they already match)
+                caches, logits = eng._commit_state(caches, logits)
             pool.logits, pool.caches = logits, caches
             pool.advance(self.chunk)
             toks_np = np.asarray(toks)  # (capacity, chunk)
@@ -906,6 +913,7 @@ class ContinuousScheduler:
                                      if snap is not None else 0),
                 ledger_fragmentation_bytes=(snap.fragmentation_bytes
                                             if snap is not None else 0),
+                mesh=eng.mesh_shape(),
                 events=tuple(self._tm_events)))
         self._tm_events = []
 

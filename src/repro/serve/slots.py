@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.distributed import pool_sharding as PSH
 from repro.serve import kv_cache as KC
 
 
@@ -61,10 +62,15 @@ class SlotPool:
     slot_payload_bytes: int = 0
     slot_overhead_bytes: int = 0
     aux_bytes: int = 0
+    # Tensor-parallel serving (DESIGN.md §Distributed serving): when a
+    # mesh is set, the cache k/v buffers are committed head-sharded on
+    # the "model" axis and logits/pos replicated; None keeps today's
+    # uncommitted single-device arrays bitwise unchanged.
+    mesh: Optional[Any] = None
 
     @classmethod
     def create(cls, cfg: ModelConfig, pattern, capacity: int, max_len: int,
-               logits_like: jax.Array) -> "SlotPool":
+               logits_like: jax.Array, mesh=None) -> "SlotPool":
         # Function-level import: engine imports nothing from slots, so
         # this cannot cycle — and it keeps the byte split definition in
         # exactly one place (kv_cache_stats).
@@ -74,13 +80,19 @@ class SlotPool:
         logits = jnp.zeros((capacity,) + logits_like.shape[1:],
                            logits_like.dtype)
         pos = jnp.zeros((capacity,), jnp.int32)
+        if mesh is not None:
+            caches = PSH.shard_pool_caches(caches, mesh)
+            logits = PSH.replicate(logits, mesh)
+            pos = PSH.replicate(pos, mesh)
         stats = kv_cache_stats(caches)
         # Every leaf's leading axis is ``capacity``, so the division is
         # exact — ledger slot bytes reconcile with kv_cache_stats to the
-        # byte regardless of occupancy.
+        # byte regardless of occupancy.  Byte figures stay *global*
+        # (logical) bytes under a mesh: the ledger reconciles against
+        # kv_cache_stats' global walk either way.
         return cls(
             caches=caches, logits=logits, pos=pos,
-            pattern=pattern, capacity=capacity,
+            pattern=pattern, capacity=capacity, mesh=mesh,
             free=list(range(capacity - 1, -1, -1)),  # pop() → slot 0 first
             slot_payload_bytes=stats.payload_bytes // capacity,
             slot_overhead_bytes=stats.overhead_bytes // capacity,
@@ -104,9 +116,24 @@ class SlotPool:
             raise ValueError(
                 "slot-pool geometry mismatch: admission must bucket "
                 "requests by cache geometry before packing them")
+        if self.mesh is not None:
+            # normalize the admission's state to the pool's committed
+            # shardings so ``_write_slot`` sees exactly one input
+            # sharding per geometry (restore-path and fresh-prefill
+            # admissions would otherwise split its jit entries)
+            req_caches = PSH.shard_pool_caches(req_caches, self.mesh)
+            req_logits = PSH.replicate(req_logits, self.mesh)
         self.caches, self.logits, self.pos = _write_slot(
             self.caches, self.logits, self.pos, req_caches, req_logits,
             jnp.int32(seq_len), jnp.int32(slot))
+        if self.mesh is not None:
+            # re-commit the jit outputs: ``_write_slot`` is a producer
+            # boundary, and its compiler-chosen output shardings would
+            # otherwise leak into the next decode's input signature and
+            # split the per-(geometry, mesh) executable (guard-fatal)
+            self.caches = PSH.shard_pool_caches(self.caches, self.mesh)
+            self.logits = PSH.replicate(self.logits, self.mesh)
+            self.pos = PSH.replicate(self.pos, self.mesh)
 
     def poison_slot(self, slot: int) -> None:
         """Chaos-engineering hook: overwrite row ``slot`` of every

@@ -407,12 +407,15 @@ class TickRecord:
     prefix_misses: int = 0          # prefix-cache misses this tick
     ledger_device_bytes: int = 0    # MemoryLedger total (0 = ledger off)
     ledger_fragmentation_bytes: int = 0  # stranded empty-slot bytes
+    mesh: Optional[Tuple[int, ...]] = None  # device-mesh shape, None =
+                                    # single-device serving
     events: Tuple[str, ...] = ()    # non-ok retirements "status:rid",
                                     # sa_level moves "sa_level:old->new"
 
     def as_dict(self) -> Dict[str, object]:
         d = self.__dict__.copy()
         d["batch_by_geometry"] = dict(self.batch_by_geometry)
+        d["mesh"] = list(self.mesh) if self.mesh is not None else None
         d["events"] = list(self.events)
         return d
 
